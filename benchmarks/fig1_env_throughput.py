@@ -1,0 +1,70 @@
+"""Fig. 1 reproduction: env execution throughput, CaiRL vs interpreted Gym.
+
+Paper setup: 100 000 steps averaged over trials, console and render modes,
+four classic-control envs. Here: compiled scan rollouts (batched) vs the
+pure-Python baselines, same dynamics, same machine. Reported: steps/s both
+ways and the ratio (paper: ~5× console, ~80× render).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+
+from repro.core import PythonRunner, make, rollout_random
+from repro.envs.baseline_python import BASELINES
+
+ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
+
+
+def bench_compiled(name: str, steps: int, batch: int, render: bool, trials: int = 3) -> float:
+    env = make(name)
+    key = jax.random.PRNGKey(0)
+    jax.block_until_ready(rollout_random(env, key, steps, batch, render)[0])  # compile
+    best = 0.0
+    for t in range(trials):
+        k = jax.random.PRNGKey(t)
+        t0 = time.perf_counter()
+        jax.block_until_ready(rollout_random(env, k, steps, batch, render)[0])
+        sps = steps * batch / (time.perf_counter() - t0)
+        best = max(best, sps)
+    return best
+
+
+def bench_python(name: str, steps: int, render: bool, trials: int = 2) -> float:
+    runner = PythonRunner(BASELINES[name])
+    best = 0.0
+    for t in range(trials):
+        t0 = time.perf_counter()
+        runner.run(steps, render=render, seed=t)
+        sps = steps / (time.perf_counter() - t0)
+        best = max(best, sps)
+    return best
+
+
+def run(console_steps: int = 2000, render_steps: int = 200, batch: int = 64) -> Dict:
+    rows = {}
+    for name in ENVS:
+        c_sps = bench_compiled(name, console_steps, batch, render=False)
+        p_sps = bench_python(name, console_steps, render=False)
+        cr_sps = bench_compiled(name, render_steps, batch, render=True)
+        pr_sps = bench_python(name, max(render_steps // 4, 25), render=True)
+        rows[name] = {
+            "cairl_console_sps": c_sps,
+            "gym_console_sps": p_sps,
+            "console_speedup": c_sps / p_sps,
+            "cairl_render_sps": cr_sps,
+            "gym_render_sps": pr_sps,
+            "render_speedup": cr_sps / pr_sps,
+        }
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for name, r in rows.items():
+        emit(f"fig1/{name}/console", 1e6 / r["cairl_console_sps"],
+             f"speedup={r['console_speedup']:.1f}x (cairl {r['cairl_console_sps']:.0f} vs gym {r['gym_console_sps']:.0f} steps/s)")
+        emit(f"fig1/{name}/render", 1e6 / r["cairl_render_sps"],
+             f"speedup={r['render_speedup']:.1f}x (cairl {r['cairl_render_sps']:.0f} vs gym {r['gym_render_sps']:.0f} steps/s)")

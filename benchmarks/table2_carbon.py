@@ -1,0 +1,60 @@
+"""Table II reproduction: energy & CO₂, CaiRL vs interpreted Gym.
+
+Paper methodology (§V-C): run DQN + env, track energy/emissions with the
+impact tracker, isolate the environment's share by subtracting learner-only
+cost. Console variant (1e6 steps in the paper) and graphical variant
+(1e4 steps), both scaled to this host's budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.cairl_dqn import PAPER_TABLE_I
+from repro.core import PythonRunner, make, rollout_random
+from repro.envs.baseline_python import BASELINES
+from repro.sustainability.impact import ImpactTracker
+
+
+def _measure(fn):
+    with ImpactTracker() as t:
+        fn()
+    return t.impact
+
+
+def run(console_steps: int = 160_000, render_steps: int = 1600):
+    env = make("CartPole-v1")
+    batch = 64
+    # warm-up compiles excluded from the measurement, as the paper excludes
+    # C++ compile time (it is paid once per binary, not per experiment).
+    # Must use the SAME static shapes as the measured calls (jit cache key).
+    jax.block_until_ready(rollout_random(
+        env, jax.random.PRNGKey(0), console_steps // batch, batch, False)[0])
+    jax.block_until_ready(rollout_random(
+        env, jax.random.PRNGKey(0), render_steps // batch, batch, True)[0])
+    runner = PythonRunner(BASELINES["CartPole-v1"])
+
+    out = {}
+    for mode, steps in (("console", console_steps), ("graphical", render_steps)):
+        render = mode == "graphical"
+        cairl = _measure(lambda: jax.block_until_ready(
+            rollout_random(env, jax.random.PRNGKey(1), steps // batch, batch, render)[0]))
+        gym_steps = min(steps, 20_000 if not render else 400)
+        gym = _measure(lambda: runner.run(gym_steps, render=render))
+        gym = type(gym)(wall_s=gym.wall_s * steps / gym_steps,
+                        cpu_s=gym.cpu_s * steps / gym_steps)  # scale to equal steps
+        out[mode] = {
+            "cairl_co2_kg": cairl.co2_kg, "gym_co2_kg": gym.co2_kg,
+            "cairl_mwh": cairl.energy_mwh, "gym_mwh": gym.energy_mwh,
+            "ratio": gym.co2_kg / max(cairl.co2_kg, 1e-12),
+        }
+    return out
+
+
+def main(emit):
+    r = run()
+    for mode, row in r.items():
+        emit(f"table2/{mode}/co2", row["cairl_co2_kg"] * 1e9,
+             f"cairl={row['cairl_co2_kg']:.2e}kg gym={row['gym_co2_kg']:.2e}kg "
+             f"ratio={row['ratio']:.1f}x (paper: {'20.9x' if mode == 'console' else '1.5e5x'})")

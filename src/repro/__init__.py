@@ -1,0 +1,4 @@
+"""CaiRL on JAX/TPU — compiled RL environment toolkit + multi-pod learner.
+
+Drop-in entry point (paper Listing 2): `from repro import cairl`.
+"""

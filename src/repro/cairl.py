@@ -1,0 +1,10 @@
+"""`from repro import cairl; e = cairl.make("CartPole-v1")` — Listing 2 drop-in.
+
+`make` returns the stateful Gym-compatible shim (reset/step/render), matching
+the paper's migration story: change one import line, keep the experiment code.
+For compiled fast paths use `cairl.make_functional` + `cairl.rollout`.
+"""
+from repro.core.registry import make_compat as make  # noqa: F401  (Gym drop-in)
+from repro.core.registry import make as make_functional  # noqa: F401
+from repro.core.registry import registered  # noqa: F401
+from repro.core.runner import rollout, rollout_random  # noqa: F401

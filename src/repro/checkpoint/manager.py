@@ -1,0 +1,122 @@
+"""Mesh-agnostic checkpointing: atomic, keep-k, restorable onto any mesh.
+
+Format: one directory per step containing
+  - `tree.json`   : flattened key-paths, shapes, dtypes (the pytree schema)
+  - `arrays.npz`  : one entry per leaf, keyed by its path string
+
+Arrays are stored UNSHARDED (gathered), so a checkpoint written from a
+(16, 16) mesh restores onto (2, 16, 16), (8, 8) or a single CPU device —
+this is the elastic-scaling contract (runtime/elastic.py). On a real
+multi-host cluster the same layout is written per-shard with a process-0
+manifest; the single-host gather form keeps semantics identical.
+
+Writes are atomic (tmp dir + os.replace) so a preemption mid-save never
+corrupts the latest checkpoint; `save(..., blocking=False)` runs the write
+in a daemon thread off the training loop's critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Pytree, blocking: bool = True) -> str:
+        flat = _flatten(tree)  # gather on the caller thread (device -> host)
+        treedef = jax.tree_util.tree_structure(tree)
+        schema = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        }
+
+        def write():
+            final = os.path.join(self.directory, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "tree.json"), "w") as f:
+                json.dump(schema, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Pytree, step: Optional[int] = None,
+                shardings: Optional[Pytree] = None) -> Pytree:
+        """Restore into `template`'s structure; `shardings` may target ANY mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+            else [None] * len(paths_and_leaves)
+        )
+        out = []
+        for (p, leaf), sh in zip(paths_and_leaves, shard_leaves):
+            key = jax.tree_util.keystr(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs template {leaf.shape}")
+            arr = arr.astype(leaf.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

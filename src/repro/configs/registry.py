@@ -1,0 +1,88 @@
+"""Architecture registry: full configs, reduced smoke configs, input specs.
+
+Every assigned arch ships:
+  - `full()`    : the exact published configuration (dry-run only — params
+                  are never materialised on this host; ShapeDtypeStructs).
+  - `reduced()` : same family/pattern, tiny dims — one CPU train step in the
+                  smoke tests.
+  - `input_specs(cfg, shape, multi_pod)` (below): ShapeDtypeStruct stand-ins
+    for every model input of a (train|prefill|decode) step.
+
+Skips (see DESIGN.md §5): long_500k for pure full-attention archs.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, shape_by_name
+
+ARCH_IDS = (
+    "yi-6b",
+    "minicpm3-4b",
+    "h2o-danube-1.8b",
+    "gemma3-27b",
+    "xlstm-350m",
+    "chameleon-34b",
+    "zamba2-2.7b",
+    "whisper-base",
+    "olmoe-1b-7b",
+    "granite-moe-1b-a400m",
+)
+
+_MODULES = {
+    "yi-6b": "yi_6b",
+    "minicpm3-4b": "minicpm3_4b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "gemma3-27b": "gemma3_27b",
+    "xlstm-350m": "xlstm_350m",
+    "chameleon-34b": "chameleon_34b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-base": "whisper_base",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+}
+
+# long_500k requires sub-quadratic attention / bounded state.
+LONG_CONTEXT_OK = {"xlstm-350m", "zamba2-2.7b", "h2o-danube-1.8b", "gemma3-27b"}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.reduced() if reduced else mod.full()
+
+
+def cell_supported(arch: str, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason string."""
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "pure full-attention arch: 500k-token decode is skipped (DESIGN.md §5)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str,
+                max_seq: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one step's model inputs (no allocation)."""
+    if isinstance(shape, str):
+        shape = shape_by_name(shape)
+    b, l = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, l), i32),
+            "labels": jax.ShapeDtypeStruct((b, l), i32),
+        }
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, l), i32)}
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        # one new token against a seq_len-deep cache
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)

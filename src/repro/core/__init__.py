@@ -1,0 +1,21 @@
+"""CaiRL core: the paper's contribution as a composable JAX module."""
+from repro.core.env import Env, Timestep
+from repro.core.registry import make, make_compat, register, registered
+from repro.core.runner import PythonRunner, Trajectory, episode_return, rollout, rollout_random
+from repro.core.spaces import Box, Discrete, MultiDiscrete, Space
+from repro.core.wrappers import (
+    AutoReset,
+    FlattenObs,
+    ObsToPixels,
+    RewardScale,
+    TimeLimit,
+    Vec,
+    Wrapper,
+)
+
+__all__ = [
+    "Env", "Timestep", "make", "make_compat", "register", "registered",
+    "PythonRunner", "Trajectory", "episode_return", "rollout", "rollout_random",
+    "Box", "Discrete", "MultiDiscrete", "Space",
+    "AutoReset", "FlattenObs", "ObsToPixels", "RewardScale", "TimeLimit", "Vec", "Wrapper",
+]

@@ -1,0 +1,77 @@
+"""Functional environment protocol — CaiRL `Environments` module (paper §III-A.3).
+
+The paper's `Env` interface is `step(action)`, `reset()`, `render()`. CaiRL's
+C++ templates resolve environment logic at compile time; the JAX analogue is a
+*functional* core: an `Env` object holds only static configuration, and all
+dynamics are pure functions of an explicit state pytree, so `jax.jit` stages
+the whole environment into the XLA program (and `vmap`/`scan` batch and
+amortise it — see core/runner.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spaces import Space
+
+
+class Timestep(NamedTuple):
+    """One transition. `done` folds terminal+truncation like classic Gym."""
+
+    state: Any
+    obs: jax.Array
+    reward: jax.Array
+    done: jax.Array
+    info: Dict[str, jax.Array]
+
+
+class Env:
+    """Base environment. Subclasses are static config + pure functions.
+
+    Contract (everything traceable):
+      reset(key)            -> (state, obs)
+      step(state, act, key) -> Timestep
+      render(state)         -> (H, W) float32 framebuffer in [0, 1]
+    """
+
+    observation_space: Space
+    action_space: Space
+
+    # -- core API ------------------------------------------------------------
+    def reset(self, key: jax.Array) -> Tuple[Any, jax.Array]:
+        raise NotImplementedError
+
+    def step(self, state: Any, action: jax.Array, key: jax.Array) -> Timestep:
+        raise NotImplementedError
+
+    def render(self, state: Any) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} has no renderer")
+
+    # -- metadata ------------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+    @property
+    def unwrapped(self) -> "Env":
+        return self
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}()"
+
+
+def zeros_info() -> Dict[str, jax.Array]:
+    """Envs must return a *fixed-structure* info dict so scan carriers match."""
+    return {}
+
+
+def terminal_timestep(env: Env, state, obs) -> Timestep:
+    return Timestep(
+        state=state,
+        obs=obs,
+        reward=jnp.asarray(0.0, jnp.float32),
+        done=jnp.asarray(True),
+        info=zeros_info(),
+    )

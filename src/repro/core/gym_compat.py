@@ -1,0 +1,84 @@
+"""Stateful Gym-API shim — the paper's drop-in compatibility claim (Listing 2).
+
+Wraps the functional core in an object with classic Gym semantics so existing
+codebases migrate by swapping `gym.make` for `cairl.make` (repro.cairl.make).
+Step/reset/render are jit-compiled once per env type; the interpreter only
+pays one dispatch per call — and codebases that adopt the `run()` fast path
+(core/runner.py) pay zero.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.env import Env
+
+
+class _SpaceShim:
+    """Gym-style stateful `space.sample()`."""
+
+    def __init__(self, space, rng: np.random.Generator):
+        self._space = space
+        self._rng = rng
+
+    def __getattr__(self, item):
+        return getattr(self._space, item)
+
+    def sample(self):
+        seed = int(self._rng.integers(0, 2**31 - 1))
+        return np.asarray(self._space.sample(jax.random.PRNGKey(seed)))
+
+
+class GymCompat:
+    """`e = cairl.make("CartPole-v1"); e.reset(); e.step(a); e.render()`."""
+
+    def __init__(self, env: Env, seed: int = 0):
+        self._env = env
+        self._key = jax.random.PRNGKey(seed)
+        self._state: Any = None
+        self._rng = np.random.default_rng(seed)
+        self.observation_space = _SpaceShim(env.observation_space, self._rng)
+        self.action_space = _SpaceShim(env.action_space, self._rng)
+        # Compile once; all subsequent calls are cached executable dispatches.
+        self._reset = jax.jit(env.reset)
+        self._step = jax.jit(env.step)
+        try:
+            self._render = jax.jit(env.render)
+        except Exception:  # env without renderer
+            self._render = None
+
+    # -- Gym API ---------------------------------------------------------
+    def seed(self, seed: int) -> None:
+        self._key = jax.random.PRNGKey(seed)
+        self._rng = np.random.default_rng(seed)
+
+    def reset(self) -> np.ndarray:
+        self._key, sub = jax.random.split(self._key)
+        self._state, obs = self._reset(sub)
+        return np.asarray(obs)
+
+    def step(self, action):
+        if self._state is None:
+            raise RuntimeError("call reset() before step()")
+        self._key, sub = jax.random.split(self._key)
+        ts = self._step(self._state, jnp.asarray(action), sub)
+        self._state = ts.state
+        return np.asarray(ts.obs), float(ts.reward), bool(ts.done), {}
+
+    def render(self):
+        if self._render is None:
+            raise NotImplementedError("env has no renderer")
+        return np.asarray(self._render(self._state))
+
+    def action_space_sample(self):
+        return self.action_space.sample()
+
+    @property
+    def unwrapped(self) -> Env:
+        return self._env.unwrapped
+
+    def close(self) -> None:
+        self._state = None

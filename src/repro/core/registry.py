@@ -1,0 +1,50 @@
+"""Environment registry — the `cairl.make("CartPole-v1")` entry point.
+
+Paper Listing 2: switching a Gym experiment to CaiRL is a one-line change
+(`gym.make` -> `cairl.make`). `make()` returns the *functional* env;
+`make_compat()` returns the stateful Gym-API shim (core/gym_compat.py) for
+literal drop-in use.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.env import Env
+
+_REGISTRY: Dict[str, Callable[..., Env]] = {}
+
+
+def register(name: str, factory: Callable[..., Env]) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"environment {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def registered() -> list:
+    return sorted(_REGISTRY)
+
+
+def make(name: str, **kwargs) -> Env:
+    """Build a functional env by registry id (e.g. "CartPole-v1")."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown environment {name!r}; known: {registered()}")
+    return _REGISTRY[name](**kwargs)
+
+
+def make_compat(name: str, seed: int = 0, **kwargs):
+    """Gym drop-in: stateful reset()/step()/render() object (Listing 2)."""
+    from repro.core.gym_compat import GymCompat
+
+    return GymCompat(make(name, **kwargs), seed=seed)
+
+
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    import repro.envs  # noqa: F401  (registers on import)

@@ -1,0 +1,202 @@
+"""Compiled rollout runners — the paper's `run()` fast path (§III-B).
+
+The paper: "The interpreter overhead can be reduced by ... implementing a run
+function, notably eliminating the need for interpreted loop code in Python."
+On JAX the equivalent is strictly stronger: `lax.scan` compiles the *entire*
+N-step × B-env rollout into one device program, so per-step host dispatch is
+exactly zero (vs. merely cheaper in C++).
+
+Runners provided (the paper's `Runners` module, §III-A.1, re-interpreted as
+execution backends rather than foreign VMs):
+  - `rollout`        : policy-driven scan rollout (autoreset inside the scan)
+  - `rollout_random` : action_space.sample-driven (Listing 1/2 benchmark loop)
+  - `rollout_render` : same, but renders every frame inside the program
+  - `PythonRunner`   : host-callback bridge for foreign/interpreted envs —
+                       the structural stand-in for the JVM/Flash runners,
+                       and the harness for the AI-Gym-style baselines.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.wrappers import AutoReset, Vec
+
+
+class Trajectory(NamedTuple):
+    obs: jax.Array          # (T, B, ...) observation seen *before* acting
+    action: jax.Array       # (T, B, ...)
+    reward: jax.Array       # (T, B)
+    done: jax.Array         # (T, B)
+    next_obs: jax.Array     # (T, B, ...) post-step obs (pre-autoreset terminal obs)
+
+
+def _batched(env: Env, batch_size: int) -> Env:
+    return Vec(AutoReset(env), batch_size)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 3, 4))
+def rollout(
+    env: Env,
+    policy: Callable[[Any, jax.Array, jax.Array], jax.Array],
+    policy_params: Any,
+    num_steps: int,
+    batch_size: int,
+    key: jax.Array,
+) -> Trajectory:
+    """Scan `num_steps` of `batch_size` autoresetting envs under `policy`.
+
+    policy(params, obs, key) -> action, vmapped over the batch internally.
+    """
+    venv = _batched(env, batch_size)
+    key, rkey = jax.random.split(key)
+    state, obs = venv.reset(rkey)
+
+    def step_fn(carry, _):
+        state, obs, key = carry
+        key, akey, skey = jax.random.split(key, 3)
+        akeys = jax.random.split(akey, batch_size)
+        action = jax.vmap(policy, in_axes=(None, 0, 0))(policy_params, obs, akeys)
+        ts = venv.step(state, action, skey)
+        terminal_obs = ts.info.get("terminal_obs", ts.obs)
+        out = (obs, action, ts.reward, ts.done, terminal_obs)
+        return (ts.state, ts.obs, key), out
+
+    (_, _, _), (o, a, r, d, no) = jax.lax.scan(
+        step_fn, (state, obs, key), None, length=num_steps
+    )
+    return Trajectory(o, a, r, d, no)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
+def rollout_random(
+    env: Env,
+    key: jax.Array,
+    num_steps: int,
+    batch_size: int = 1,
+    render: bool = False,
+):
+    """The paper's benchmark loop (Listing 1/2): random actions, optional render.
+
+    Returns (sum_reward (B,), episodes (B,), last_frame or None) so the whole
+    computation is kept live without materialising trajectories.
+    """
+    venv = _batched(env, batch_size)
+    key, rkey = jax.random.split(key)
+    state, obs = venv.reset(rkey)
+    frame0 = venv.render(state) if render else jnp.zeros((batch_size,), jnp.float32)
+
+    def step_fn(carry, _):
+        state, key, rew, eps, frame = carry
+        key, akey, skey = jax.random.split(key, 3)
+        action = venv.sample_actions(akey)
+        ts = venv.step(state, action, skey)
+        frame = venv.render(ts.state) if render else frame
+        return (ts.state, key, rew + ts.reward, eps + ts.done.astype(jnp.int32), frame), None
+
+    init = (state, key, jnp.zeros((batch_size,), jnp.float32), jnp.zeros((batch_size,), jnp.int32), frame0)
+    (state, _, rew, eps, frame), _ = jax.lax.scan(step_fn, init, None, length=num_steps)
+    return rew, eps, frame
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
+def rollout_random_fast(
+    env: Env,
+    key: jax.Array,
+    num_steps: int,
+    batch_size: int = 1,
+    render: bool = False,
+):
+    """§Perf env-plane fast path: same semantics as rollout_random, less RNG.
+
+    Changes vs. the baseline (hypothesis→measured in EXPERIMENTS.md §Perf):
+      1. one `fold_in` per step instead of a 3-way `split` chain (threefry
+         is a real cost at classic-control physics sizes);
+      2. actions sampled as ONE batched randint/uniform instead of a vmapped
+         per-env `space.sample` (B threefry streams → 1);
+      3. AutoReset keys derived from the step key (no per-env key carry).
+    """
+    from repro.core.spaces import Box, Discrete
+
+    venv = Vec(AutoReset(env), batch_size)
+    state, obs = venv.reset(jax.random.fold_in(key, 0x5EED))
+    space = env.action_space
+
+    def sample_actions(k):
+        if isinstance(space, Discrete):
+            return jax.random.randint(k, (batch_size,), 0, space.n, dtype=space.dtype)
+        if isinstance(space, Box):
+            low, high = space._bounds()
+            u = jax.random.uniform(k, (batch_size,) + space.shape, space.dtype)
+            return low + u * (high - low)
+        return venv.sample_actions(k)
+
+    frame0 = venv.render(state) if render else jnp.zeros((batch_size,), jnp.float32)
+
+    def step_fn(carry, i):
+        state, rew, eps, frame = carry
+        k = jax.random.fold_in(key, i)
+        action = sample_actions(k)
+        ts = venv.step(state, action, k)
+        frame = venv.render(ts.state) if render else frame
+        return (ts.state, rew + ts.reward, eps + ts.done.astype(jnp.int32), frame), None
+
+    init = (state, jnp.zeros((batch_size,), jnp.float32),
+            jnp.zeros((batch_size,), jnp.int32), frame0)
+    (state, rew, eps, frame), _ = jax.lax.scan(step_fn, init, jnp.arange(1, num_steps + 1))
+    return rew, eps, frame
+
+
+class PythonRunner:
+    """Host-side runner for interpreted envs (the paper's foreign runtimes).
+
+    Drives any object with Gym semantics (`reset() -> obs`,
+    `step(a) -> (obs, r, done, info)`, optional `render()`). Used to run the
+    pure-Python baselines under the same harness for Fig. 1/2 comparisons.
+    """
+
+    def __init__(self, env_factory: Callable[[], Any]):
+        self.env_factory = env_factory
+
+    def run(self, num_steps: int, render: bool = False, seed: int = 0):
+        env = self.env_factory()
+        env.seed(seed)
+        obs = env.reset()
+        total_r, episodes = 0.0, 0
+        for _ in range(num_steps):
+            a = env.action_space_sample()
+            obs, r, done, _ = env.step(a)
+            if render:
+                env.render()
+            total_r += r
+            if done:
+                episodes += 1
+                obs = env.reset()
+        return total_r, episodes
+
+
+def episode_return(env: Env, policy, policy_params, key: jax.Array, max_steps: int = 1000):
+    """Single-episode evaluation, compiled (while_loop so it exits early)."""
+
+    def body(carry):
+        state, obs, key, ret, done, t = carry
+        key, akey, skey = jax.random.split(key, 3)
+        action = policy(policy_params, obs, akey)
+        ts = env.step(state, action, skey)
+        ret = ret + ts.reward * (1.0 - done)
+        done = jnp.maximum(done, ts.done.astype(jnp.float32))
+        return (ts.state, ts.obs, key, ret, done, t + 1)
+
+    def cond(carry):
+        *_, done, t = carry
+        return (done < 1.0) & (t < max_steps)
+
+    key, rkey = jax.random.split(key)
+    state, obs = env.reset(rkey)
+    init = (state, obs, key, jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
+    *_, ret, _, steps = jax.lax.while_loop(cond, body, init)
+    return ret, steps

@@ -1,0 +1,121 @@
+"""Observation/action spaces — CaiRL `Spaces` module (paper §III-A.5).
+
+The paper's Box/Discrete types are "highly optimized code, which efficiently
+increases populating data matrices"; here every space is a static dataclass
+whose `sample` is pure-JAX (traceable, vmappable) so sampling can run inside
+compiled rollouts — the XLA analogue of the paper's compile-time evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Space:
+    """Abstract space. Static (hashable) so envs can be jit-static args."""
+
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def contains(self, x) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Discrete(Space):
+    """One-dimensional set of integers {0..n-1} (paper §III-A.5)."""
+
+    n: int
+    dtype: jnp.dtype = jnp.int32
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return ()
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        return jax.random.randint(key, (), 0, self.n, dtype=self.dtype)
+
+    def contains(self, x) -> jax.Array:
+        x = jnp.asarray(x)
+        return (x >= 0) & (x < self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Box(Space):
+    """n-dimensional real-valued matrix with per-element bounds."""
+
+    low: Tuple[float, ...] | float
+    high: Tuple[float, ...] | float
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype = jnp.float32
+
+    def _bounds(self):
+        low = jnp.broadcast_to(jnp.asarray(self.low, self.dtype), self.shape)
+        high = jnp.broadcast_to(jnp.asarray(self.high, self.dtype), self.shape)
+        return low, high
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        low, high = self._bounds()
+        # Unbounded dims sample from a unit normal (Gym semantics).
+        finite = jnp.isfinite(low) & jnp.isfinite(high)
+        u = jax.random.uniform(key, self.shape, self.dtype)
+        n = jax.random.normal(key, self.shape, self.dtype)
+        return jnp.where(finite, low + u * (high - low), n)
+
+    def contains(self, x) -> jax.Array:
+        low, high = self._bounds()
+        x = jnp.asarray(x)
+        return jnp.all((x >= low) & (x <= high))
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiDiscrete(Space):
+    """Vector of independent Discrete axes (e.g. Multitask's per-minigame action)."""
+
+    nvec: Tuple[int, ...]
+    dtype: jnp.dtype = jnp.int32
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (len(self.nvec),)
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        keys = jax.random.split(key, len(self.nvec))
+        return jnp.stack(
+            [jax.random.randint(k, (), 0, n, dtype=self.dtype) for k, n in zip(keys, self.nvec)]
+        )
+
+    def contains(self, x) -> jax.Array:
+        x = jnp.asarray(x)
+        nv = jnp.asarray(self.nvec, self.dtype)
+        return jnp.all((x >= 0) & (x < nv))
+
+
+def flatten_space(space: Space) -> Box:
+    """The Flatten wrapper's target space (paper §III-A.4)."""
+    if isinstance(space, Box):
+        size = int(np.prod(space.shape)) if space.shape else 1
+        return Box(low=-np.inf, high=np.inf, shape=(size,), dtype=space.dtype)
+    if isinstance(space, Discrete):
+        return Box(low=0.0, high=1.0, shape=(space.n,), dtype=jnp.float32)
+    if isinstance(space, MultiDiscrete):
+        return Box(low=0.0, high=1.0, shape=(int(sum(space.nvec)),), dtype=jnp.float32)
+    raise TypeError(f"cannot flatten {type(space)}")
+
+
+def flatten_obs(space: Space, obs: jax.Array) -> jax.Array:
+    if isinstance(space, Box):
+        return obs.reshape((-1,)).astype(space.dtype)
+    if isinstance(space, Discrete):
+        return jax.nn.one_hot(obs, space.n, dtype=jnp.float32)
+    if isinstance(space, MultiDiscrete):
+        parts = [jax.nn.one_hot(obs[i], n, dtype=jnp.float32) for i, n in enumerate(space.nvec)]
+        return jnp.concatenate(parts)
+    raise TypeError(f"cannot flatten {type(space)}")

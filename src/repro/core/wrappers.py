@@ -1,0 +1,200 @@
+"""Wrappers — CaiRL `wrappers` module (paper §III-A.4).
+
+The paper ships Flatten + TimeLimit ("max timestamp restrictions") as static
+template compositions: `Flatten<TimeLimit<200, CartPoleEnv>>()`. Here wrapper
+composition happens at trace time, so the composed program is a single fused
+XLA computation — the same zero-runtime-cost layering the templates buy in C++.
+
+AutoReset and Vec are the two wrappers compiled rollouts need (runner.py):
+AutoReset re-enters `reset` inside the device program on `done`, Vec `vmap`s
+the whole stack across a batch axis (the SIMD analogue, paper §II-B).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Space, flatten_obs, flatten_space
+
+
+class Wrapper(Env):
+    """Delegating base wrapper."""
+
+    def __init__(self, env: Env):
+        self.env = env
+
+    @property
+    def observation_space(self) -> Space:  # type: ignore[override]
+        return self.env.observation_space
+
+    @property
+    def action_space(self) -> Space:  # type: ignore[override]
+        return self.env.action_space
+
+    @property
+    def unwrapped(self) -> Env:
+        return self.env.unwrapped
+
+    @property
+    def name(self) -> str:
+        return self.env.name
+
+    def reset(self, key):
+        return self.env.reset(key)
+
+    def step(self, state, action, key):
+        return self.env.step(state, action, key)
+
+    def render(self, state):
+        return self.env.render(state)
+
+    def __repr__(self):  # pragma: no cover
+        return f"{type(self).__name__}({self.env!r})"
+
+
+class TimeLimitState(NamedTuple):
+    inner: Any
+    t: jax.Array
+
+
+class TimeLimit(Wrapper):
+    """Truncate episodes at `max_steps` (paper's TimeLimit / Listing 1)."""
+
+    def __init__(self, env: Env, max_steps: int):
+        super().__init__(env)
+        self.max_steps = max_steps
+
+    def reset(self, key):
+        inner, obs = self.env.reset(key)
+        return TimeLimitState(inner, jnp.asarray(0, jnp.int32)), obs
+
+    def step(self, state: TimeLimitState, action, key):
+        ts = self.env.step(state.inner, action, key)
+        t = state.t + 1
+        done = ts.done | (t >= self.max_steps)
+        return ts._replace(state=TimeLimitState(ts.state, t), done=done)
+
+    def render(self, state: TimeLimitState):
+        return self.env.render(state.inner)
+
+
+class FlattenObs(Wrapper):
+    """Flatten observations to a 1-D Box (paper's Flatten wrapper)."""
+
+    @property
+    def observation_space(self) -> Box:  # type: ignore[override]
+        return flatten_space(self.env.observation_space)
+
+    def _flat(self, obs):
+        return flatten_obs(self.env.observation_space, obs)
+
+    def reset(self, key):
+        state, obs = self.env.reset(key)
+        return state, self._flat(obs)
+
+    def step(self, state, action, key):
+        ts = self.env.step(state, action, key)
+        return ts._replace(obs=self._flat(ts.obs))
+
+
+class AutoResetState(NamedTuple):
+    inner: Any
+    key: jax.Array
+
+
+class AutoReset(Wrapper):
+    """Reset inside the compiled program when an episode ends.
+
+    This is what lets the paper-style `run()` fast path (runner.py) execute
+    arbitrarily many episodes without ever returning to the host. The
+    pre-reset terminal obs is surfaced in `info["terminal_obs"]`.
+    """
+
+    def reset(self, key):
+        key, sub = jax.random.split(key)
+        inner, obs = self.env.reset(sub)
+        return AutoResetState(inner, key), obs
+
+    def step(self, state: AutoResetState, action, key):
+        ts = self.env.step(state.inner, action, key)
+        next_key, reset_key = jax.random.split(state.key)
+        fresh_state, fresh_obs = self.env.reset(reset_key)
+        new_inner = jax.tree.map(
+            lambda a, b: jnp.where(ts.done, a, b), fresh_state, ts.state
+        )
+        new_obs = jnp.where(ts.done, fresh_obs, ts.obs)
+        info = dict(ts.info)
+        info["terminal_obs"] = ts.obs
+        return ts._replace(state=AutoResetState(new_inner, next_key), obs=new_obs, info=info)
+
+    def render(self, state: AutoResetState):
+        return self.env.render(state.inner)
+
+
+class Vec(Wrapper):
+    """Batch `num_envs` copies with vmap — one instruction steps them all.
+
+    The SIMD claim of the paper (§II-B/§III): vectorised arithmetic across the
+    env batch maps to VPU lanes / MXU tiles on TPU instead of CPU SIMD.
+    """
+
+    def __init__(self, env: Env, num_envs: int):
+        super().__init__(env)
+        self.num_envs = num_envs
+
+    def reset(self, key):
+        keys = jax.random.split(key, self.num_envs)
+        return jax.vmap(self.env.reset)(keys)
+
+    def step(self, state, action, key):
+        keys = jax.random.split(key, self.num_envs)
+        return jax.vmap(self.env.step)(state, action, keys)
+
+    def render(self, state):
+        return jax.vmap(self.env.render)(state)
+
+    def sample_actions(self, key):
+        keys = jax.random.split(key, self.num_envs)
+        return jax.vmap(self.env.action_space.sample)(keys)
+
+
+class RewardScale(Wrapper):
+    """Scale rewards by a static factor."""
+
+    def __init__(self, env: Env, scale: float):
+        super().__init__(env)
+        self.scale = float(scale)
+
+    def step(self, state, action, key):
+        ts = self.env.step(state, action, key)
+        return ts._replace(reward=ts.reward * self.scale)
+
+
+class ObsToPixels(Wrapper):
+    """Replace the observation with the rendered framebuffer.
+
+    Paper §IV-C: "game observations are either raw pixels or the virtual
+    Flash memory". This wrapper is the raw-pixels mode for any env with a
+    renderer; DQN's CNN consumes it directly on device (no readback — the
+    software-rendering point of §II-B).
+    """
+
+    @property
+    def observation_space(self) -> Box:  # type: ignore[override]
+        h, w = self._hw()
+        return Box(low=0.0, high=1.0, shape=(h, w), dtype=jnp.float32)
+
+    def _hw(self):
+        env = self.env.unwrapped
+        return env.frame_shape  # envs with renderers expose (H, W)
+
+    def reset(self, key):
+        state, _ = self.env.reset(key)
+        return state, self.env.render(state)
+
+    def step(self, state, action, key):
+        ts = self.env.step(state, action, key)
+        return ts._replace(obs=self.env.render(ts.state))

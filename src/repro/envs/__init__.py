@@ -1,0 +1,28 @@
+"""Built-in environments. Importing this module registers the Gym-named ids.
+
+Registered ids mirror Gym's, with Gym's default TimeLimit wrapping, so
+`cairl.make("CartPole-v1")` is behaviourally a drop-in (paper Listing 2).
+"""
+from repro.core.registry import register
+from repro.core.wrappers import TimeLimit
+from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
+from repro.envs.multitask import Multitask
+from repro.envs.puzzle import LightsOut
+
+register("CartPole-v1", lambda **kw: TimeLimit(CartPole(**kw), 500))
+register("Acrobot-v1", lambda **kw: TimeLimit(Acrobot(**kw), 500))
+register("MountainCar-v0", lambda **kw: TimeLimit(MountainCar(**kw), 200))
+register("Pendulum-v1", lambda **kw: TimeLimit(Pendulum(**kw), 200))
+register("Multitask-v0", lambda **kw: TimeLimit(Multitask(**kw), 1000))
+register("LightsOut-v0", lambda **kw: TimeLimit(LightsOut(**kw), 100))
+
+# Raw (unwrapped) variants for custom composition, mirroring CaiRL's
+# template-composition style: Flatten<TimeLimit<200, CartPoleEnv>>().
+register("CartPole-raw", CartPole)
+register("Acrobot-raw", Acrobot)
+register("MountainCar-raw", MountainCar)
+register("Pendulum-raw", Pendulum)
+register("Multitask-raw", Multitask)
+register("LightsOut-raw", LightsOut)
+
+__all__ = ["Acrobot", "CartPole", "MountainCar", "Pendulum", "Multitask", "LightsOut"]

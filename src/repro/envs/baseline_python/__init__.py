@@ -1,0 +1,13 @@
+"""Interpreted-Python baselines ("AI Gym" comparator in the paper's Fig. 1/2)."""
+from repro.envs.baseline_python.classic import AcrobotPy, CartPolePy, MountainCarPy, PendulumPy
+from repro.envs.baseline_python.multitask import MultitaskPy
+
+BASELINES = {
+    "CartPole-v1": CartPolePy,
+    "Acrobot-v1": AcrobotPy,
+    "MountainCar-v0": MountainCarPy,
+    "Pendulum-v1": PendulumPy,
+    "Multitask-v0": MultitaskPy,
+}
+
+__all__ = ["CartPolePy", "AcrobotPy", "MountainCarPy", "PendulumPy", "MultitaskPy", "BASELINES"]

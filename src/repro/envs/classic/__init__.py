@@ -1,0 +1,6 @@
+from repro.envs.classic.acrobot import Acrobot
+from repro.envs.classic.cartpole import CartPole
+from repro.envs.classic.mountain_car import MountainCar
+from repro.envs.classic.pendulum import Pendulum
+
+__all__ = ["Acrobot", "CartPole", "MountainCar", "Pendulum"]

@@ -1,0 +1,120 @@
+"""Acrobot-v1, Gym-faithful (book dynamics, RK4), fully traceable."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+DT = 0.2
+L1 = 1.0
+L2 = 1.0
+M1 = 1.0
+M2 = 1.0
+LC1 = 0.5
+LC2 = 0.5
+I1 = 1.0
+I2 = 1.0
+G = 9.8
+MAX_VEL_1 = 4 * jnp.pi
+MAX_VEL_2 = 9 * jnp.pi
+TORQUES = jnp.asarray([-1.0, 0.0, 1.0])
+
+
+class AcrobotState(NamedTuple):
+    theta1: jax.Array
+    theta2: jax.Array
+    dtheta1: jax.Array
+    dtheta2: jax.Array
+
+
+def _dsdt(s, torque):
+    theta1, theta2, dtheta1, dtheta2 = s
+    d1 = (
+        M1 * LC1**2
+        + M2 * (L1**2 + LC2**2 + 2 * L1 * LC2 * jnp.cos(theta2))
+        + I1 + I2
+    )
+    d2 = M2 * (LC2**2 + L1 * LC2 * jnp.cos(theta2)) + I2
+    phi2 = M2 * LC2 * G * jnp.cos(theta1 + theta2 - jnp.pi / 2.0)
+    phi1 = (
+        -M2 * L1 * LC2 * dtheta2**2 * jnp.sin(theta2)
+        - 2 * M2 * L1 * LC2 * dtheta2 * dtheta1 * jnp.sin(theta2)
+        + (M1 * LC1 + M2 * L1) * G * jnp.cos(theta1 - jnp.pi / 2)
+        + phi2
+    )
+    # "book" dynamics (Gym default).
+    ddtheta2 = (
+        torque + d2 / d1 * phi1 - M2 * L1 * LC2 * dtheta1**2 * jnp.sin(theta2) - phi2
+    ) / (M2 * LC2**2 + I2 - d2**2 / d1)
+    ddtheta1 = -(d2 * ddtheta2 + phi1) / d1
+    return jnp.stack([dtheta1, dtheta2, ddtheta1, ddtheta2])
+
+
+def _rk4(s, torque):
+    k1 = _dsdt(s, torque)
+    k2 = _dsdt(s + DT / 2 * k1, torque)
+    k3 = _dsdt(s + DT / 2 * k2, torque)
+    k4 = _dsdt(s + DT * k3, torque)
+    return s + DT / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+
+
+def _wrap(x, lo, hi):
+    return lo + jnp.mod(x - lo, hi - lo)
+
+
+class Acrobot(Env):
+    observation_space = Box(
+        low=(-1.0, -1.0, -1.0, -1.0, -float(MAX_VEL_1), -float(MAX_VEL_2)),
+        high=(1.0, 1.0, 1.0, 1.0, float(MAX_VEL_1), float(MAX_VEL_2)),
+        shape=(6,),
+    )
+    action_space = Discrete(3)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        vals = jax.random.uniform(key, (4,), minval=-0.1, maxval=0.1)
+        state = AcrobotState(vals[0], vals[1], vals[2], vals[3])
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s: AcrobotState):
+        return jnp.stack(
+            [jnp.cos(s.theta1), jnp.sin(s.theta1), jnp.cos(s.theta2), jnp.sin(s.theta2), s.dtheta1, s.dtheta2]
+        ).astype(jnp.float32)
+
+    def step(self, state: AcrobotState, action, key):
+        torque = TORQUES[action]
+        vec = jnp.stack([state.theta1, state.theta2, state.dtheta1, state.dtheta2])
+        ns = _rk4(vec, torque)
+        theta1 = _wrap(ns[0], -jnp.pi, jnp.pi)
+        theta2 = _wrap(ns[1], -jnp.pi, jnp.pi)
+        dtheta1 = jnp.clip(ns[2], -MAX_VEL_1, MAX_VEL_1)
+        dtheta2 = jnp.clip(ns[3], -MAX_VEL_2, MAX_VEL_2)
+        new = AcrobotState(theta1, theta2, dtheta1, dtheta2)
+        done = (-jnp.cos(theta1) - jnp.cos(theta2 + theta1)) > 1.0
+        reward = jnp.where(done, 0.0, -1.0).astype(jnp.float32)
+        return Timestep(new, self._obs(new), reward, done, {})
+
+    def scene(self, state: AcrobotState):
+        ox, oy = 0.5, 0.45
+        x1 = ox + 0.22 * jnp.sin(state.theta1)
+        y1 = oy + 0.22 * jnp.cos(state.theta1)
+        x2 = x1 + 0.22 * jnp.sin(state.theta1 + state.theta2)
+        y2 = y1 + 0.22 * jnp.cos(state.theta1 + state.theta2)
+        segs = jnp.stack([
+            jnp.stack([jnp.asarray(0.1), jnp.asarray(oy - 0.22), jnp.asarray(0.9), jnp.asarray(oy - 0.22), jnp.asarray(0.004)]),  # goal line
+            jnp.stack([jnp.asarray(ox), jnp.asarray(oy), x1, y1, jnp.asarray(0.02)]),
+            jnp.stack([x1, y1, x2, y2, jnp.asarray(0.02)]),
+        ])
+        intens = jnp.asarray([0.3, 0.8, 1.0], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: AcrobotState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

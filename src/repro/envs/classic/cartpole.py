@@ -1,0 +1,87 @@
+"""CartPole-v1, Gym-faithful dynamics, fully traceable (paper §V-A benchmark)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+# Gym constants (gym.envs.classic_control.cartpole).
+GRAVITY = 9.8
+MASSCART = 1.0
+MASSPOLE = 0.1
+TOTAL_MASS = MASSCART + MASSPOLE
+LENGTH = 0.5               # half pole length
+POLEMASS_LENGTH = MASSPOLE * LENGTH
+FORCE_MAG = 10.0
+TAU = 0.02
+THETA_THRESHOLD = 12 * 2 * jnp.pi / 360
+X_THRESHOLD = 2.4
+
+
+class CartPoleState(NamedTuple):
+    x: jax.Array
+    x_dot: jax.Array
+    theta: jax.Array
+    theta_dot: jax.Array
+
+
+class CartPole(Env):
+    observation_space = Box(
+        low=(-4.8, -jnp.inf, -0.418, -jnp.inf),
+        high=(4.8, jnp.inf, 0.418, jnp.inf),
+        shape=(4,),
+    )
+    action_space = Discrete(2)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        state = CartPoleState(vals[0], vals[1], vals[2], vals[3])
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s: CartPoleState):
+        return jnp.stack([s.x, s.x_dot, s.theta, s.theta_dot]).astype(jnp.float32)
+
+    def step(self, state: CartPoleState, action, key):
+        force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
+        costheta, sintheta = jnp.cos(state.theta), jnp.sin(state.theta)
+        temp = (force + POLEMASS_LENGTH * state.theta_dot**2 * sintheta) / TOTAL_MASS
+        thetaacc = (GRAVITY * sintheta - costheta * temp) / (
+            LENGTH * (4.0 / 3.0 - MASSPOLE * costheta**2 / TOTAL_MASS)
+        )
+        xacc = temp - POLEMASS_LENGTH * thetaacc * costheta / TOTAL_MASS
+        # Euler, kinematics_integrator == "euler"
+        x = state.x + TAU * state.x_dot
+        x_dot = state.x_dot + TAU * xacc
+        theta = state.theta + TAU * state.theta_dot
+        theta_dot = state.theta_dot + TAU * thetaacc
+        ns = CartPoleState(x, x_dot, theta, theta_dot)
+        done = (
+            (jnp.abs(x) > X_THRESHOLD) | (jnp.abs(theta) > THETA_THRESHOLD)
+        )
+        return Timestep(ns, self._obs(ns), jnp.asarray(1.0, jnp.float32), done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: CartPoleState):
+        cx = 0.5 + state.x / (2 * X_THRESHOLD) * 0.8       # track [-2.4,2.4] -> [0.1,0.9]
+        cy = jnp.asarray(0.75)
+        tip_x = cx + jnp.sin(state.theta) * 0.35
+        tip_y = cy - jnp.cos(state.theta) * 0.35
+        segs = jnp.stack([
+            jnp.stack([jnp.asarray(0.05), cy + 0.05, jnp.asarray(0.95), cy + 0.05, jnp.asarray(0.006)]),  # track
+            jnp.stack([cx - 0.07, cy, cx + 0.07, cy, jnp.asarray(0.035)]),                                 # cart
+            jnp.stack([cx, cy, tip_x, tip_y, jnp.asarray(0.015)]),                                         # pole
+        ])
+        intens = jnp.asarray([0.35, 0.7, 1.0], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: CartPoleState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

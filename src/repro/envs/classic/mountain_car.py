@@ -1,0 +1,79 @@
+"""MountainCar-v0, Gym-faithful, fully traceable."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+MIN_POS = -1.2
+MAX_POS = 0.6
+MAX_SPEED = 0.07
+GOAL_POS = 0.5
+GOAL_VEL = 0.0
+FORCE = 0.001
+GRAVITY = 0.0025
+
+
+class MountainCarState(NamedTuple):
+    position: jax.Array
+    velocity: jax.Array
+
+
+def _height(x):
+    return jnp.sin(3 * x) * 0.45 + 0.55
+
+
+class MountainCar(Env):
+    observation_space = Box(low=(MIN_POS, -MAX_SPEED), high=(MAX_POS, MAX_SPEED), shape=(2,))
+    action_space = Discrete(3)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        pos = jax.random.uniform(key, (), minval=-0.6, maxval=-0.4)
+        state = MountainCarState(pos, jnp.asarray(0.0))
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s):
+        return jnp.stack([s.position, s.velocity]).astype(jnp.float32)
+
+    def step(self, state: MountainCarState, action, key):
+        velocity = state.velocity + (action - 1) * FORCE + jnp.cos(3 * state.position) * (-GRAVITY)
+        velocity = jnp.clip(velocity, -MAX_SPEED, MAX_SPEED)
+        position = jnp.clip(state.position + velocity, MIN_POS, MAX_POS)
+        velocity = jnp.where((position <= MIN_POS) & (velocity < 0), 0.0, velocity)
+        ns = MountainCarState(position, velocity)
+        done = (position >= GOAL_POS) & (velocity >= GOAL_VEL)
+        return Timestep(ns, self._obs(ns), jnp.asarray(-1.0, jnp.float32), done, {})
+
+    def scene(self, state: MountainCarState):
+        def to_xy(p):
+            x = (p - MIN_POS) / (MAX_POS - MIN_POS) * 0.8 + 0.1
+            y = 0.9 - _height(p) * 0.6
+            return x, y
+
+        # terrain: 6 chained segments
+        ps = jnp.linspace(MIN_POS, MAX_POS, 7)
+        xs, ys = to_xy(ps)
+        terrain = jnp.stack(
+            [jnp.stack([xs[i], ys[i], xs[i + 1], ys[i + 1], jnp.asarray(0.006)]) for i in range(6)]
+        )
+        cx, cy = to_xy(state.position)
+        gx, gy = to_xy(jnp.asarray(GOAL_POS))
+        extra = jnp.stack([
+            jnp.stack([cx, cy - 0.03, cx, cy - 0.03, jnp.asarray(0.03)]),            # car dot
+            jnp.stack([gx, gy - 0.10, gx, gy, jnp.asarray(0.008)]),                  # flag pole
+        ])
+        segs = jnp.concatenate([terrain, extra])
+        intens = jnp.asarray([0.35] * 6 + [1.0, 0.7], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: MountainCarState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -1,0 +1,72 @@
+"""Pendulum-v1, Gym-faithful, fully traceable (continuous control)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box
+
+MAX_SPEED = 8.0
+MAX_TORQUE = 2.0
+DT = 0.05
+G = 10.0
+M = 1.0
+L = 1.0
+
+
+def _angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+class PendulumState(NamedTuple):
+    theta: jax.Array
+    theta_dot: jax.Array
+
+
+class Pendulum(Env):
+    observation_space = Box(low=(-1.0, -1.0, -MAX_SPEED), high=(1.0, 1.0, MAX_SPEED), shape=(3,))
+    action_space = Box(low=-MAX_TORQUE, high=MAX_TORQUE, shape=(1,))
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        theta = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        theta_dot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        state = PendulumState(theta, theta_dot)
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s):
+        return jnp.stack([jnp.cos(s.theta), jnp.sin(s.theta), s.theta_dot]).astype(jnp.float32)
+
+    def step(self, state: PendulumState, action, key):
+        u = jnp.clip(jnp.reshape(action, ()), -MAX_TORQUE, MAX_TORQUE)
+        th, thdot = state.theta, state.theta_dot
+        costs = _angle_normalize(th) ** 2 + 0.1 * thdot**2 + 0.001 * u**2
+        newthdot = thdot + (3 * G / (2 * L) * jnp.sin(th) + 3.0 / (M * L**2) * u) * DT
+        newthdot = jnp.clip(newthdot, -MAX_SPEED, MAX_SPEED)
+        newth = th + newthdot * DT
+        ns = PendulumState(newth, newthdot)
+        return Timestep(
+            ns, self._obs(ns), (-costs).astype(jnp.float32), jnp.asarray(False), {}
+        )
+
+    def scene(self, state: PendulumState):
+        ox, oy = 0.5, 0.5
+        tx = ox + 0.35 * jnp.sin(state.theta)
+        ty = oy - 0.35 * jnp.cos(state.theta)
+        segs = jnp.stack([
+            jnp.stack([jnp.asarray(ox), jnp.asarray(oy), tx, ty, jnp.asarray(0.025)]),
+            jnp.stack([jnp.asarray(ox), jnp.asarray(oy), jnp.asarray(ox), jnp.asarray(oy), jnp.asarray(0.02)]),
+        ])
+        intens = jnp.asarray([1.0, 0.5], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: PendulumState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -1,0 +1,117 @@
+"""Multitask — the paper's flagship Flash environment, re-implemented natively.
+
+Paper §IV-C: "Multitask is an environment that provides minigames that the
+agent must control concurrently. If the agent fails one of the tasks, the
+game terminates. The reward function is defined as positive rewards while the
+game is running and negative rewards when the game engine terminates ...
+observations are either raw pixels or the virtual Flash memory, and the
+action-space is discrete."
+
+Two concurrent minigames share one Discrete(3) action (left/stay/right):
+  (1) CATCH : a ball falls from the top; the paddle must be under it.
+  (2) DODGE : an obstacle falls down one of three lanes; the player must not
+              be in that lane when it lands.
+"Virtual flash memory" observation = the 10-dim game-state vector; raw-pixel
+observation = wrap with core.wrappers.ObsToPixels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+BALL_SPEED = 0.05
+OBSTACLE_SPEED = 0.04
+PADDLE_SPEED = 0.07
+CATCH_RADIUS = 0.13
+ALIVE_REWARD = 1.0
+FAIL_REWARD = -10.0
+
+
+class MultitaskState(NamedTuple):
+    paddle_x: jax.Array     # [0, 1]
+    ball_x: jax.Array       # [0, 1]
+    ball_y: jax.Array       # [0, 1], 1 = bottom
+    lane: jax.Array         # player lane {0,1,2}
+    obs_lane: jax.Array     # obstacle lane {0,1,2}
+    obs_y: jax.Array        # [0, 1]
+    t: jax.Array
+
+
+class Multitask(Env):
+    observation_space = Box(low=0.0, high=1.0, shape=(10,))
+    action_space = Discrete(3)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        state = MultitaskState(
+            paddle_x=jnp.asarray(0.5),
+            ball_x=jax.random.uniform(k1, (), minval=0.1, maxval=0.9),
+            ball_y=jnp.asarray(0.0),
+            lane=jnp.asarray(1, jnp.int32),
+            obs_lane=jax.random.randint(k2, (), 0, 3),
+            obs_y=jnp.asarray(0.0),
+            t=jnp.asarray(0, jnp.int32),
+        )
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s: MultitaskState):
+        lane_oh = jax.nn.one_hot(s.lane, 3)
+        obs_oh = jax.nn.one_hot(s.obs_lane, 3)
+        return jnp.concatenate(
+            [jnp.stack([s.paddle_x, s.ball_x, s.ball_y, s.obs_y]), lane_oh, obs_oh]
+        ).astype(jnp.float32)
+
+    def step(self, state: MultitaskState, action, key):
+        k_ball, k_lane = jax.random.split(key)
+        move = action - 1  # {-1, 0, +1}
+
+        # CATCH minigame.
+        paddle_x = jnp.clip(state.paddle_x + move * PADDLE_SPEED, 0.05, 0.95)
+        ball_y = state.ball_y + BALL_SPEED
+        landing = ball_y >= 1.0
+        caught = jnp.abs(state.ball_x - paddle_x) <= CATCH_RADIUS
+        catch_fail = landing & ~caught
+        ball_x = jnp.where(landing, jax.random.uniform(k_ball, (), minval=0.1, maxval=0.9), state.ball_x)
+        ball_y = jnp.where(landing, 0.0, ball_y)
+
+        # DODGE minigame (same action moves the lane).
+        lane = jnp.clip(state.lane + move, 0, 2)
+        obs_y = state.obs_y + OBSTACLE_SPEED
+        obs_landing = obs_y >= 1.0
+        dodge_fail = obs_landing & (state.obs_lane == lane)
+        obs_lane = jnp.where(obs_landing, jax.random.randint(k_lane, (), 0, 3), state.obs_lane)
+        obs_y = jnp.where(obs_landing, 0.0, obs_y)
+
+        done = catch_fail | dodge_fail
+        reward = jnp.where(done, FAIL_REWARD, ALIVE_REWARD).astype(jnp.float32)
+        ns = MultitaskState(paddle_x, ball_x, ball_y, lane, obs_lane, obs_y, state.t + 1)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    def scene(self, state: MultitaskState):
+        # Left half: catch. Right half: dodge (3 lanes).
+        px = 0.05 + state.paddle_x * 0.40
+        bx = 0.05 + state.ball_x * 0.40
+        lane_x = 0.55 + (state.lane.astype(jnp.float32) + 0.5) * 0.40 / 3
+        obs_x = 0.55 + (state.obs_lane.astype(jnp.float32) + 0.5) * 0.40 / 3
+        segs = jnp.stack([
+            jnp.stack([jnp.asarray(0.5), jnp.asarray(0.0), jnp.asarray(0.5), jnp.asarray(1.0), jnp.asarray(0.004)]),  # divider
+            jnp.stack([px - 0.06, jnp.asarray(0.95), px + 0.06, jnp.asarray(0.95), jnp.asarray(0.02)]),               # paddle
+            jnp.stack([bx, state.ball_y, bx, state.ball_y, jnp.asarray(0.025)]),                                       # ball
+            jnp.stack([lane_x, jnp.asarray(0.95), lane_x, jnp.asarray(0.95), jnp.asarray(0.03)]),                      # player
+            jnp.stack([obs_x, state.obs_y, obs_x, state.obs_y, jnp.asarray(0.03)]),                                    # obstacle
+        ])
+        intens = jnp.asarray([0.25, 0.8, 1.0, 0.8, 1.0], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: MultitaskState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -1,0 +1,109 @@
+"""Puzzle runtime — Simon Tatham collection analogue (paper §IV-D).
+
+LightsOut on an N×N board: pressing a cell toggles it and its von-Neumann
+neighbours; the episode ends when all lights are off. Like the paper's
+puzzles, a heuristic solver ships with the env ("All puzzles include a
+heuristic-based solver, enabling transfer and curriculum learning research"):
+`solve()` does GF(2) Gaussian elimination host-side and returns an optimal
+press set usable for imitation/curriculum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+
+class LightsOutState(NamedTuple):
+    board: jax.Array  # (N, N) int32 in {0, 1}
+    t: jax.Array
+
+
+def _toggle(board: jax.Array, action: jax.Array, n: int) -> jax.Array:
+    r, c = action // n, action % n
+    rows = jnp.arange(n)
+    cols = jnp.arange(n)
+    rr = rows[:, None]
+    cc = cols[None, :]
+    cross = ((rr == r) & (jnp.abs(cc - c) <= 1)) | ((cc == c) & (jnp.abs(rr - r) <= 1))
+    return board ^ cross.astype(board.dtype)
+
+
+class LightsOut(Env):
+    def __init__(self, n: int = 5, scramble_presses: int = 6):
+        self.n = n
+        self.scramble_presses = scramble_presses
+        self.observation_space = Box(low=0.0, high=1.0, shape=(n * n,))
+        self.action_space = Discrete(n * n)
+        self.frame_shape = (84, 84)
+
+    def reset(self, key):
+        # Scramble from solved by K random presses => always solvable.
+        presses = jax.random.randint(key, (self.scramble_presses,), 0, self.n * self.n)
+        board = jnp.zeros((self.n, self.n), jnp.int32)
+        board = jax.lax.fori_loop(
+            0, self.scramble_presses, lambda i, b: _toggle(b, presses[i], self.n), board
+        )
+        state = LightsOutState(board, jnp.asarray(0, jnp.int32))
+        return state, self._obs(state)
+
+    def _obs(self, s: LightsOutState):
+        return s.board.reshape(-1).astype(jnp.float32)
+
+    def step(self, state: LightsOutState, action, key):
+        board = _toggle(state.board, action, self.n)
+        done = jnp.sum(board) == 0
+        reward = jnp.where(done, 10.0, -1.0).astype(jnp.float32)
+        ns = LightsOutState(board, state.t + 1)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    def render(self, state: LightsOutState):
+        from repro.kernels.raster import rasterize_single
+
+        n = self.n
+        centers = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
+        cx = jnp.tile(centers, n)
+        cy = jnp.repeat(centers, n)
+        r = jnp.full((n * n,), 0.35 / n, jnp.float32)
+        segs = jnp.stack([cx, cy, cx, cy, r], axis=-1)
+        intens = state.board.reshape(-1).astype(jnp.float32) * 0.8 + 0.15
+        return rasterize_single(segs, intens, *self.frame_shape)
+
+    # -- heuristic solver (host-side; paper §IV-D) ---------------------------
+    def solve(self, board: np.ndarray) -> list:
+        """GF(2) linear solve: returns cell indices to press (optimal set)."""
+        n = self.n
+        m = n * n
+        a = np.zeros((m, m), np.uint8)
+        for act in range(m):
+            r, c = divmod(act, n)
+            for dr, dc in ((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < n and 0 <= cc < n:
+                    a[rr * n + cc, act] = 1
+        b = np.asarray(board, np.uint8).reshape(-1).copy()
+        # Gaussian elimination over GF(2).
+        aug = np.concatenate([a, b[:, None]], axis=1)
+        row = 0
+        pivots = []
+        for col in range(m):
+            pivot = next((r for r in range(row, m) if aug[r, col]), None)
+            if pivot is None:
+                continue
+            aug[[row, pivot]] = aug[[pivot, row]]
+            for r in range(m):
+                if r != row and aug[r, col]:
+                    aug[r] ^= aug[row]
+            pivots.append(col)
+            row += 1
+        if any(aug[r, -1] for r in range(row, m)):
+            raise ValueError("unsolvable board")
+        x = np.zeros(m, np.uint8)
+        for r, col in enumerate(pivots):
+            x[col] = aug[r, -1]
+        return [i for i in range(m) if x[i]]

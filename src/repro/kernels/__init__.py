@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+- raster/    : the paper's SIMD software renderer, TPU-native (VMEM framebuffers)
+- attention/ : flash GQA attention for the learner plane (train/prefill)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with backend dispatch) and ref.py (pure-jnp oracle used by tests).
+"""

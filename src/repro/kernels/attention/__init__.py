@@ -1,0 +1,5 @@
+from repro.kernels.attention.flash import flash_attention
+from repro.kernels.attention.ops import attention
+from repro.kernels.attention.ref import attention_ref
+
+__all__ = ["flash_attention", "attention", "attention_ref"]

@@ -1,0 +1,128 @@
+"""Flash GQA attention — Pallas TPU kernel (MXU-tiled, VMEM-streaming).
+
+Online-softmax attention in the FlashAttention-2 style, adapted to TPU:
+  - grid = (B, Hq, nQ, nK); the last (nK) axis is sequential ("arbitrary")
+    so the running (m, l, acc) state lives in VMEM scratch across K blocks.
+  - Q/K/V blocks are MXU-aligned (block_q × d and block_k × d with d a
+    multiple of 128 on real hardware); s = q·kᵀ and p·v both hit the MXU.
+  - GQA: K/V index maps divide the query-head index by the group size, so
+    kv blocks are fetched once per group position without materialising the
+    head-repeat (the repeat the jnp oracle pays in HBM is free here).
+  - causal + sliding-window masking is positional; fully-masked K blocks are
+    skipped with pl.when (on TPU this skips the DMA+MXU work entirely).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q: int, block_k: int, nk: int, lk: int,
+    causal: bool, window: int, scale: float,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = iq * block_q
+    k0 = ik * block_k
+
+    # Block-level skip: the whole K block is out of the causal/window range.
+    live = True
+    if causal:
+        live = k0 <= q0 + block_q - 1
+    if window > 0:
+        live = live & (k0 + block_k - 1 > q0 - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (bq, bk)
+
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < lk
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]                             # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Lq, D)
+    k: jax.Array,  # (B, Hkv, Lk, D)
+    v: jax.Array,  # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    if lq % block_q or lk % block_k:
+        raise ValueError(f"seq lens ({lq},{lk}) must tile by blocks ({block_q},{block_k})")
+    nq, nk = lq // block_q, lk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k, nk=nk, lk=lk,
+        causal=causal, window=window, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

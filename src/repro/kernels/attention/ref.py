@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash GQA attention (causal / sliding-window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Lq, D)
+    k: jnp.ndarray,  # (B, Hkv, Lk, D)
+    v: jnp.ndarray,  # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = unbounded; else keys in (qpos-window, qpos]
+    q_offset: int = 0,        # absolute position of q[0] (decode/prefill chunking)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+
+    qpos = jnp.arange(lq) + q_offset
+    kpos = jnp.arange(lk)
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.raster.ops import rasterize, rasterize_single
+from repro.kernels.raster.raster import rasterize_pallas
+from repro.kernels.raster.ref import rasterize_ref
+
+__all__ = ["rasterize", "rasterize_single", "rasterize_pallas", "rasterize_ref"]

@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the rasteriser: picks Pallas on TPU, oracle on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.raster.raster import rasterize_pallas
+from repro.kernels.raster.ref import rasterize_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "backend"))
+def rasterize(segs: jax.Array, intens: jax.Array, h: int, w: int, backend: str = "auto") -> jax.Array:
+    """Render (B, S, 5) capsule scenes to (B, H, W) float32 framebuffers.
+
+    backend: "auto" (pallas on TPU, jnp elsewhere) | "pallas" | "pallas_interpret" | "jnp".
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return rasterize_pallas(segs, intens, h, w)
+    if backend == "pallas_interpret":
+        return rasterize_pallas(segs, intens, h, w, interpret=True)
+    if backend == "jnp":
+        return rasterize_ref(segs, intens, h, w)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def rasterize_single(segs: jax.Array, intens: jax.Array, h: int, w: int) -> jax.Array:
+    """Unbatched convenience: (S, 5), (S,) -> (H, W)."""
+    return rasterize(segs[None], intens[None], h, w)[0]

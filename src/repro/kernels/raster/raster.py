@@ -1,0 +1,87 @@
+"""Pallas TPU rasteriser — the paper's SIMD software renderer, TPU-native.
+
+Paper §II-B: for simple 2D scenes, *software* rendering into a framebuffer
+that lives where the consumer reads it beats hardware rendering + readback by
+~80×. On TPU the analogue is rasterising directly in VMEM with VPU vector
+ops: the (H, W) framebuffer tile is VMEM-resident, each segment's coverage is
+evaluated across all 8×128 lanes at once, and the frame lands in the same HBM
+the learner's conv stack reads — no host or PCIe round-trip anywhere.
+
+Tiling: grid over (batch-tile,); each program instance rasterises BB frames.
+The framebuffer block (BB, H, Wp) with W padded to the 128-lane boundary and
+the (BB, S, 8) segment table both sit in VMEM; S is looped with fori_loop so
+VMEM stays O(H·W) regardless of scene complexity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-8
+
+
+def _raster_kernel(segs_ref, inten_ref, out_ref, *, h: int, w: int, s: int, bb: int):
+    softness = 1.0 / h
+    # Pixel-centre coordinate planes for the padded (h, wp) tile. TPU needs
+    # >=2D iota; broadcasted_iota is the native VPU form.
+    wp = out_ref.shape[-1]
+    py = (jax.lax.broadcasted_iota(jnp.float32, (h, wp), 0) + 0.5) / h
+    px = (jax.lax.broadcasted_iota(jnp.float32, (h, wp), 1) + 0.5) / w
+
+    def one_frame(b, _):
+        def body(i, fb):
+            x0 = segs_ref[b, i, 0]
+            y0 = segs_ref[b, i, 1]
+            x1 = segs_ref[b, i, 2]
+            y1 = segs_ref[b, i, 3]
+            r = segs_ref[b, i, 4]
+            inten = inten_ref[b, i]
+            dx, dy = x1 - x0, y1 - y0
+            l2 = jnp.maximum(dx * dx + dy * dy, _EPS)
+            t = jnp.clip(((px - x0) * dx + (py - y0) * dy) / l2, 0.0, 1.0)
+            cx, cy = x0 + t * dx, y0 + t * dy
+            d = jnp.sqrt((px - cx) ** 2 + (py - cy) ** 2)
+            cov = jnp.clip((r - d) / softness + 0.5, 0.0, 1.0) * inten
+            return jnp.maximum(fb, cov)
+
+        fb = jax.lax.fori_loop(0, s, body, jnp.zeros((h, wp), jnp.float32))
+        out_ref[b, :, :] = fb
+        return 0
+
+    jax.lax.fori_loop(0, bb, one_frame, 0)
+
+
+def rasterize_pallas(
+    segs: jax.Array,
+    intens: jax.Array,
+    h: int,
+    w: int,
+    *,
+    batch_block: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, S, 5) segments + (B, S) intensities -> (B, H, W) framebuffers."""
+    b, s, _ = segs.shape
+    bb = min(batch_block, b)
+    if b % bb:
+        raise ValueError(f"batch {b} not divisible by batch_block {bb}")
+    wp = (w + 127) // 128 * 128  # lane-align the minor dim
+
+    # Pad the segment feature dim to 8 so the VMEM tile is sublane-friendly.
+    segs8 = jnp.concatenate([segs, jnp.zeros((b, s, 3), segs.dtype)], axis=-1)
+
+    out = pl.pallas_call(
+        functools.partial(_raster_kernel, h=h, w=w, s=s, bb=bb),
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, s, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, h, wp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, wp), jnp.float32),
+        interpret=interpret,
+    )(segs8.astype(jnp.float32), intens.astype(jnp.float32))
+    return out[:, :, :w]

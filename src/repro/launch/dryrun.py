@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this AOT-compiles the real step function (train_step with
+optimizer, prefill, or decode_step with caches) against ShapeDtypeStruct
+stand-ins on the production mesh — no arrays are ever materialised. The
+compiled artifact yields:
+  - memory_analysis()  : per-device bytes (proves the cell fits)
+  - cost_analysis()    : per-device HLO FLOPs / bytes accessed
+  - HLO text           : per-device collective-operand bytes (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+which benchmarks/roofline.py turns into the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun   # every cell
+"""
+import argparse
+import gc
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_by_name
+from repro.configs.registry import ARCH_IDS, cell_supported, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.sharding import rules
+from repro.train.trainer import TrainConfig, make_train_step, make_optimizer
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shaped(tree, shardings):
+    """Pytree of ShapeDtypeStructs carrying NamedShardings."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-operand bytes of every collective in the per-device HLO."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"(^|\)\s|\}}\s|\s){re.escape(c)}(-start|-done)?\(", rhs) or \
+               rhs.startswith(c + "(") or re.match(rf"^[\w\[\],\s()]*\)\s*{re.escape(c)}\(", rhs):
+                op = c
+                break
+        if op is None:
+            # robust fallback: opcode appears as " <op>(" anywhere on the rhs
+            for c in _COLLECTIVES:
+                if f" {c}(" in rhs or rhs.startswith(f"{c}("):
+                    op = c
+                    break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # counted at -start
+        # sum all result shapes on the lhs type annotation (may be a tuple)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(rhs.split(op)[0]):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            key = dt if dt in _DTYPE_BYTES else dt[:2]
+            nbytes += n * _DTYPE_BYTES.get(key, 4)
+        out[op] += nbytes
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _memory_analysis(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh):
+    """Returns (fn, args_shaped, donate) ready for jit(...).lower(...)."""
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(lambda k: lm.init_params(cfg, k), key)
+    psh = rules.to_shardings(rules.param_specs(params_shape, mesh), mesh)
+    params_in = _shaped(params_shape, psh)
+
+    if shape.kind == "train":
+        tc = TrainConfig(remat="full", accum_steps=1)
+        opt_shape = jax.eval_shape(lambda p: make_optimizer(tc).init(p), params_shape)
+        osh = rules.to_shardings(rules.opt_specs(opt_shape, params_shape, mesh), mesh)
+        opt_in = _shaped(opt_shape, osh)
+        batch = input_specs(cfg, shape)
+        bsh = rules.to_shardings(rules.batch_specs(mesh, batch), mesh)
+        batch_in = _shaped(batch, bsh)
+        fn = make_train_step(cfg, tc)
+        jitted = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None), donate_argnums=(0, 1))
+        return jitted, (params_in, opt_in, batch_in)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        bsh = rules.to_shardings(rules.batch_specs(mesh, batch), mesh)
+        batch_in = _shaped(batch, bsh)
+
+        def prefill_fn(params, batch):
+            return lm.prefill(cfg, params, batch, max_seq=shape.seq_len)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(psh, bsh))
+        return jitted, (params_in, batch_in)
+
+    # decode: one token against a seq_len cache
+    b = shape.global_batch
+    seq_sharded = b == 1  # long_500k: shard the cache sequence dim instead
+    cache_shape = jax.eval_shape(lambda: lm.init_cache(cfg, b, shape.seq_len))
+    csh = rules.to_shardings(
+        rules.cache_specs(mesh, cache_shape, b, seq_sharded=seq_sharded), mesh)
+    cache_in = _shaped(cache_shape, csh)
+    tok = input_specs(cfg, shape)["tokens"]
+    tsh = rules.to_shardings(rules.batch_specs(mesh, {"tokens": tok}), mesh)["tokens"]
+    tok_in = jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=tsh)
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    def decode_fn(params, caches, tokens, pos):
+        return lm.decode_step(cfg, params, caches, tokens, pos)
+
+    jitted = jax.jit(decode_fn, in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+                     out_shardings=(None, csh), donate_argnums=(1,))
+    return jitted, (params_in, cache_in, tok_in, pos_in)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> Dict[str, Any]:
+    shape = shape_by_name(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    skip = cell_supported(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    jitted, args = build_cell(arch, shape, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = dict(compiled.cost_analysis() or {})
+    mem = _memory_analysis(compiled)
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    hlo = analyze_hlo(compiled.as_text())     # trip-count-aware (see module doc)
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+        "kind": shape.kind, "chips": int(n_chips),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": float(hlo["flops"]),
+        "bytes_per_device": float(hlo["bytes"]),
+        "collective_bytes_per_device": hlo["collectives"],
+        "cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "memory_analysis": mem,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] compile ok "
+              f"({t_compile:.1f}s); flops/dev={result['flops_per_device']:.3e} "
+              f"bytes/dev={result['bytes_per_device']:.3e} "
+              f"coll/dev={hlo['collectives']['total']:.3e}B "
+              f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+        print("  memory_analysis:", {k: f"{v/2**30:.2f}GiB" for k, v in mem.items()})
+    del jitted, lowered, compiled
+    gc.collect()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[{tag}] cached, skipping")
+                continue
+            try:
+                res = run_cell(arch, shape_name, multi_pod)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                res = {"arch": arch, "shape": shape_name,
+                       "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                print(f"[{tag}] FAILED: {res['error']}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+    print(f"done; {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,19 @@
+"""Production meshes. IMPORTANT: functions only — importing this module must
+never touch jax device state (the dry-run sets XLA_FLAGS before any init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single pod = 256 chips; (2, 16, 16) = 2 pods / 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

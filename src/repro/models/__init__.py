@@ -1,0 +1,1 @@
+"""LM model stack."""

@@ -1,0 +1,357 @@
+"""Attention blocks: GQA (full / sliding-window) and MLA, with KV caches.
+
+Training/prefill attention is *query-chunked* (exact, flash-style memory
+profile in pure jnp): scores are materialised only for (B, H, q_chunk, L) at
+a time, which keeps per-device activation memory bounded for the 32k cells.
+On TPU the Pallas kernel (kernels/attention) replaces the inner computation.
+
+Cache layout (decode): k/v (B, Hkv, S_max, hd) updated in-place with
+dynamic_update_slice at `pos`; sliding-window blocks keep S_max = window and
+write at `pos % window` (ring), so danube/gemma3-local caches are O(window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding.rules import BATCH_AXES, shard_hint
+
+_NEG = -1e30
+
+
+# -- parameter init -----------------------------------------------------------
+def gqa_init(key, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype, fan_in=hq * hd),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((hd,), dtype)
+        p["k_scale"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def mla_init(key, cfg, dtype):
+    d, hq = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "w_dq": dense_init(ks[0], (d, qr), dtype),
+        "q_scale": jnp.zeros((qr,), dtype),
+        "w_uq": dense_init(ks[1], (qr, hq * (nope + rope)), dtype, fan_in=qr),
+        "w_dkv": dense_init(ks[2], (d, kvr + rope), dtype),   # latent + shared rope-k
+        "kv_scale": jnp.zeros((kvr,), dtype),
+        "w_ukv": dense_init(ks[3], (kvr, hq * (nope + vd)), dtype, fan_in=kvr),
+        "wo": dense_init(ks[4], (hq * vd, d), dtype, fan_in=hq * vd),
+    }
+
+
+# -- exact chunked attention core ---------------------------------------------
+def _attend_chunked(
+    q: jax.Array,           # (B, Hq, Lq, hd)
+    k: jax.Array,           # (B, Hkv, Lk, hd)
+    v: jax.Array,           # (B, Hkv, Lk, hd)
+    *,
+    causal: bool,
+    window: int,
+    q_offset,               # scalar: absolute position of q[0]
+    q_chunk: int = 512,
+    kv_valid_len=None,      # scalar: number of valid cache slots (decode)
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, lq, hd = q.shape
+    _, hkv, lk, _ = k.shape
+    vd = v.shape[-1]
+    group = hq // hkv
+    scale = (hd ** -0.5) if scale is None else scale
+    q_chunk = min(q_chunk, lq)
+    while lq % q_chunk:  # static: largest divisor of lq not above q_chunk
+        q_chunk -= 1
+    nq = lq // q_chunk
+
+    kpos = jnp.arange(lk)
+    k_ = k.reshape(b, hkv, 1, lk, hd)
+    v_ = v.reshape(b, hkv, 1, lk, vd)
+
+    @jax.checkpoint  # flash-style: recompute scores in backward, never store p
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=2)
+        qs = qs.reshape(b, hkv, group, q_chunk, hd)
+        s = jnp.einsum("bhgqd,bhgkd->bhgqk", qs.astype(jnp.float32), k_.astype(jnp.float32)) * scale
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, lk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        if kv_valid_len is not None:
+            mask &= (kpos < kv_valid_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhgkd->bhgqd", p, v_.astype(jnp.float32))
+        return o.reshape(b, hq, q_chunk, vd).astype(q.dtype)
+
+    if nq == 1:
+        return one_chunk(0)
+    out = jax.lax.map(one_chunk, jnp.arange(nq))           # (nq, B, Hq, qc, vd)
+    return jnp.moveaxis(out, 0, 2).reshape(b, hq, lq, vd)
+
+
+# -- GQA block ----------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, Hkv, S, hd)
+    v: jax.Array    # (B, Hkv, S, hd)
+
+
+def gqa_cache_init(cfg, batch: int, max_seq: int, window: int, dtype) -> KVCache:
+    s = min(window, max_seq) if window > 0 else max_seq
+    shape = (batch, cfg.num_kv_heads, s, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_apply(
+    params,
+    cfg,
+    x: jax.Array,                     # (B, L, d)
+    *,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,    # (L,)
+    cache: Optional[KVCache] = None,
+    cache_pos=None,                   # scalar absolute position of x[0]
+    causal: bool = True,
+    q_chunk: int = 512,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    b, l, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    positions = positions if positions is not None else jnp.arange(l)
+
+    q = (x @ params["wq"].astype(dt)).reshape(b, l, hq, hd)
+    k = (x @ params["wk"].astype(dt)).reshape(b, l, hkv, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(b, l, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_scale"], cfg.norm_eps)
+    if cache is not None and jnp.ndim(cache_pos) == 1:
+        rope_pos = cache_pos[:, None, None]    # per-slot decode: (B,1,1)
+    else:
+        rope_pos = positions                   # (L,)
+    q = apply_rope(q.swapaxes(1, 2), rope_pos, cfg.rope_theta)    # (B, Hq, L, hd)
+    k = apply_rope(k.swapaxes(1, 2), rope_pos, cfg.rope_theta)    # (B, Hkv, L, hd)
+    v = v.swapaxes(1, 2)
+    # Pin TP layouts: batch on (pod,data); heads on model where divisible
+    # (GQA kv heads replicate within their group when hkv < model size).
+    q = shard_hint(q, BATCH_AXES, "model", None, None)
+    k = shard_hint(k, BATCH_AXES, "model", None, None)
+    v = shard_hint(v, BATCH_AXES, "model", None, None)
+
+    new_cache = None
+    if cache is not None:
+        s_max = cache.k.shape[2]
+        ring = window > 0 and s_max == window
+        per_slot = jnp.ndim(cache_pos) == 1  # continuous batching: (B,) positions
+        if per_slot:
+            # one-token decode with heterogeneous per-slot positions
+            slot = (cache_pos % s_max) if ring else cache_pos
+            bi = jnp.arange(b)
+            ck = cache.k.at[bi, :, slot].set(k[:, :, 0].astype(cache.k.dtype))
+            cv = cache.v.at[bi, :, slot].set(v[:, :, 0].astype(cache.v.dtype))
+        elif ring:
+            # Ring cache: keep only the last `window` positions.
+            take = min(l, s_max)
+            slots = (cache_pos + l - take + jnp.arange(take)) % s_max
+            ck = cache.k.at[:, :, slots].set(k[:, :, l - take:].astype(cache.k.dtype))
+            cv = cache.v.at[:, :, slots].set(v[:, :, l - take:].astype(cache.v.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, cache_pos, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, cache_pos, 0))
+        new_cache = KVCache(ck, cv)
+        if per_slot:
+            # attend over slots valid for each batch row
+            kpos_ring = jnp.arange(s_max)
+            if ring:
+                base = (cache_pos // s_max)[:, None] * s_max
+                abs_pos = kpos_ring[None, :] + base
+                abs_pos = jnp.where(kpos_ring[None, :] > (cache_pos % s_max)[:, None],
+                                    abs_pos - s_max, abs_pos)
+                valid = (abs_pos <= cache_pos[:, None]) & \
+                        (abs_pos > (cache_pos - window)[:, None]) & (abs_pos >= 0)
+            else:
+                valid = kpos_ring[None, :] <= cache_pos[:, None]
+                if window > 0:
+                    valid &= kpos_ring[None, :] > (cache_pos - window)[:, None]
+            s = jnp.einsum("bhqd,bhkd->bhqk",
+                           q.reshape(b, hkv, hq // hkv * l, hd).astype(jnp.float32),
+                           ck.astype(jnp.float32)) * (hd ** -0.5)
+            s = s.reshape(b, hq, l, s_max)
+            s = jnp.where(valid[:, None, None, :], s, _NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p.reshape(b, hkv, -1, s_max),
+                           cv.astype(jnp.float32)).reshape(b, hq, l, hd).astype(dt)
+        elif ring and l > 1:
+            # SWA prefill (single-shot, cache_pos == 0): attend over the local
+            # window of the fresh k/v directly; the ring holds the tail.
+            o = _attend_chunked(q, k, v, causal=True, window=window,
+                                q_offset=0, q_chunk=q_chunk)
+        elif ring:
+            # SWA decode: attend over ring slots with ring-aware positions.
+            kpos_ring = jnp.arange(s_max)
+            slot = cache_pos % s_max
+            abs_pos = kpos_ring + (cache_pos // s_max) * s_max
+            abs_pos = jnp.where(kpos_ring > slot, abs_pos - s_max, abs_pos)
+            valid = (abs_pos <= cache_pos) & (abs_pos > cache_pos - window) & (abs_pos >= 0)
+            s = jnp.einsum("bhqd,bhkd->bhqk",
+                           q.reshape(b, hkv, hq // hkv * l, hd).astype(jnp.float32),
+                           ck.astype(jnp.float32)) * (hd ** -0.5)
+            s = s.reshape(b, hq, l, s_max)
+            s = jnp.where(valid[None, None, None, :], s, _NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p.reshape(b, hkv, -1, s_max),
+                           cv.astype(jnp.float32)).reshape(b, hq, l, hd).astype(dt)
+        else:
+            # causal w.r.t. absolute positions: kpos <= qpos also masks the
+            # not-yet-written tail of the cache (all written slots < pos+l).
+            o = _attend_chunked(q, ck, cv, causal=True, window=window,
+                                q_offset=cache_pos, q_chunk=q_chunk)
+    else:
+        o = _attend_chunked(q, k, v, causal=causal, window=window,
+                            q_offset=0, q_chunk=q_chunk)
+
+    o = shard_hint(o, BATCH_AXES, "model", None, None)
+    out = o.swapaxes(1, 2).reshape(b, l, hq * hd) @ params["wo"].astype(dt)
+    out = shard_hint(out, BATCH_AXES, None, None)
+    return out, new_cache
+
+
+# -- MLA block ------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora_rank) compressed latent
+    k_rope: jax.Array  # (B, S, rope_dim) shared positional key
+
+
+def mla_cache_init(cfg, batch: int, max_seq: int, dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def mla_apply(
+    params,
+    cfg,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[MLACache] = None,
+    cache_pos=None,
+    q_chunk: int = 512,
+) -> Tuple[jax.Array, Optional[MLACache]]:
+    b, l, d = x.shape
+    hq = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = x.dtype
+    positions = positions if positions is not None else jnp.arange(l)
+
+    # queries
+    cq = rms_norm(x @ params["w_dq"].astype(dt), params["q_scale"], cfg.norm_eps)
+    q = (cq @ params["w_uq"].astype(dt)).reshape(b, l, hq, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions, cfg.rope_theta)  # (B,H,L,rope)
+    q_nope = q_nope.swapaxes(1, 2)
+
+    # compressed kv latent + shared rotary key
+    dkv = x @ params["w_dkv"].astype(dt)                    # (B, L, kvr + rope)
+    c_kv = rms_norm(dkv[..., : cfg.kv_lora_rank], params["kv_scale"], cfg.norm_eps)
+    k_rope_new = apply_rope(dkv[..., cfg.kv_lora_rank:][:, None], positions, cfg.rope_theta)[:, 0]
+
+    new_cache = None
+    if cache is not None:
+        c_kv_all = jax.lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache_pos, 0))
+        k_rope_all = jax.lax.dynamic_update_slice(cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), (0, cache_pos, 0))
+        new_cache = MLACache(c_kv_all, k_rope_all)
+        q_offset = cache_pos
+    else:
+        c_kv_all, k_rope_all = c_kv, k_rope_new
+        q_offset = 0
+    kv_valid = None
+    causal = True  # kpos <= qpos also masks the unwritten cache tail
+
+    kvr = cfg.kv_lora_rank
+    scale = (nope + rope) ** -0.5  # scale uses the full qk dim
+    if cfg.mla_absorb:
+        # Absorbed form (beyond-paper; DeepSeek-V2 "weight absorption"):
+        # attention runs in the LATENT space. W_uk folds into the query and
+        # W_uv into the output, so keys/values are the (B, S, kvr) latent
+        # SHARED across heads — per-head K/V (B, H, S, nope+vd) is never
+        # materialised, cutting attention HBM traffic ~H× at prefill/decode.
+        w_ukv = params["w_ukv"].astype(dt).reshape(kvr, hq, nope + vd)
+        w_uk = w_ukv[..., :nope]                              # (kvr, H, nope)
+        w_uv = w_ukv[..., nope:]                              # (kvr, H, vd)
+        q_lat = jnp.einsum("blhn,khn->blhk", q_nope.swapaxes(1, 2), w_uk).swapaxes(1, 2)
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)     # (B, H, L, kvr+rope)
+        k_eff = jnp.concatenate([c_kv_all, k_rope_all.astype(c_kv_all.dtype)],
+                                axis=-1)[:, None]             # (B, 1, S, kvr+rope)
+        v_lat = c_kv_all[:, None]                             # (B, 1, S, kvr)
+        q_eff = shard_hint(q_eff, BATCH_AXES, "model", None, None)
+        o_lat = _attend_chunked(q_eff, k_eff, v_lat, causal=causal, window=0,
+                                q_offset=q_offset, q_chunk=q_chunk,
+                                kv_valid_len=kv_valid, scale=scale)
+        o = jnp.einsum("blhk,khv->blhv", o_lat.swapaxes(1, 2), w_uv).swapaxes(1, 2)
+    else:
+        # naive form: expand latent to per-head keys/values
+        ukv = (c_kv_all @ params["w_ukv"].astype(dt)).reshape(b, -1, hq, nope + vd)
+        k_nope = ukv[..., :nope].swapaxes(1, 2)               # (B, H, S, nope)
+        v = ukv[..., nope:].swapaxes(1, 2)                    # (B, H, S, vd)
+        k_rope_b = jnp.broadcast_to(k_rope_all[:, None], (b, hq, k_rope_all.shape[1], rope))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        q_full = shard_hint(q_full, BATCH_AXES, "model", None, None)
+        k_full = shard_hint(k_full, BATCH_AXES, "model", None, None)
+        v = shard_hint(v, BATCH_AXES, "model", None, None)
+        o = _attend_chunked(q_full, k_full, v, causal=causal, window=0,
+                            q_offset=q_offset, q_chunk=q_chunk,
+                            kv_valid_len=kv_valid, scale=scale)
+    o = shard_hint(o, BATCH_AXES, "model", None, None)
+    out = o.swapaxes(1, 2).reshape(b, l, hq * vd) @ params["wo"].astype(dt)
+    out = shard_hint(out, BATCH_AXES, None, None)
+    return out, new_cache
+
+
+# -- cross attention (whisper decoder) -----------------------------------------
+def cross_init(key, cfg, dtype):
+    d, hq, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, hq * hd), dtype),
+        "wv": dense_init(ks[2], (d, hq * hd), dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype, fan_in=hq * hd),
+    }
+
+
+def cross_kv(params, cfg, enc: jax.Array):
+    """Precompute encoder K/V once (prefill); reused every decode step."""
+    b, t, d = enc.shape
+    hq, hd = cfg.num_heads, cfg.hd
+    k = (enc @ params["wk"].astype(enc.dtype)).reshape(b, t, hq, hd).swapaxes(1, 2)
+    v = (enc @ params["wv"].astype(enc.dtype)).reshape(b, t, hq, hd).swapaxes(1, 2)
+    return k, v
+
+
+def cross_apply(params, cfg, x: jax.Array, kv: Tuple[jax.Array, jax.Array],
+                q_chunk: int = 512) -> jax.Array:
+    b, l, d = x.shape
+    hq, hd = cfg.num_heads, cfg.hd
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, l, hq, hd).swapaxes(1, 2)
+    k, v = kv
+    o = _attend_chunked(q, k, v, causal=False, window=0, q_offset=0, q_chunk=q_chunk)
+    return o.swapaxes(1, 2).reshape(b, l, hq * hd) @ params["wo"].astype(x.dtype)

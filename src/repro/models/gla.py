@@ -1,0 +1,101 @@
+"""Chunked gated linear attention (GLA) — the shared engine for mLSTM & Mamba2.
+
+Both xLSTM's matrix-memory cell and Mamba2's SSD are instances of the same
+recurrence with per-head *scalar* gates:
+
+    S_t = exp(a_t) · S_{t-1} + b_t · k_t v_tᵀ          S: (K, V) per head
+    y_t = q_tᵀ · S_t
+
+Training/prefill uses the chunkwise-parallel form (intra-chunk masked matmul
+on the MXU + inter-chunk lax.scan over L/C steps); decode is the one-step
+recurrence. a_t ≤ 0 guarantees all exponentials ≤ 1, so the chunked form is
+numerically stable without a running-max stabiliser.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def gla_chunked(
+    q: jax.Array,        # (B, H, L, K)
+    k: jax.Array,        # (B, H, L, K)
+    v: jax.Array,        # (B, H, L, V)
+    log_a: jax.Array,    # (B, H, L)   log decay, <= 0
+    gate_b: jax.Array,   # (B, H, L)   input gate, >= 0
+    s0: jax.Array,       # (B, H, K, V) initial state
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,H,L,V), final state (B,H,K,V))."""
+    b, h, l, kk = q.shape
+    vv = v.shape[-1]
+    c = min(chunk, l)
+    while l % c:  # static: largest divisor of l not above chunk
+        c -= 1
+    nc = l // c
+
+    def split(x):
+        return jnp.moveaxis(x.reshape(b, h, nc, c, *x.shape[4:] or ()), 2, 0) \
+            if x.ndim == 4 else jnp.moveaxis(x.reshape(b, h, nc, c), 2, 0)
+
+    qs = jnp.moveaxis(q.reshape(b, h, nc, c, kk), 2, 0)
+    ks = jnp.moveaxis(k.reshape(b, h, nc, c, kk), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, h, nc, c, vv), 2, 0)
+    als = jnp.moveaxis(log_a.reshape(b, h, nc, c), 2, 0)
+    bs = jnp.moveaxis(gate_b.reshape(b, h, nc, c), 2, 0)
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    @jax.checkpoint  # recompute intra-chunk A in backward; never store it
+    def body(s, xs):
+        qc, kc, vc, ac, bc = xs
+        qc32, kc32, vc32 = qc.astype(jnp.float32), kc.astype(jnp.float32), vc.astype(jnp.float32)
+        cum = jnp.cumsum(ac.astype(jnp.float32), axis=-1)      # (B,H,C)
+        total = cum[..., -1:]                                   # (B,H,1)
+        # intra-chunk: A_ij = (q_i·k_j)·exp(cum_i−cum_j)·b_j for j<=i
+        expnt = cum[..., :, None] - cum[..., None, :]           # (B,H,C,C)
+        decay = jnp.exp(jnp.where(tril, expnt, _NEG))
+        attn = jnp.einsum("bhik,bhjk->bhij", qc32, kc32)
+        a_mat = attn * decay * bc.astype(jnp.float32)[..., None, :]
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", a_mat, vc32)
+        # inter-chunk: carried state
+        qd = qc32 * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bhik,bhkv->bhiv", qd, s)
+        # state update
+        kd = kc32 * (jnp.exp(total - cum) * bc.astype(jnp.float32))[..., None]
+        s_new = jnp.exp(total)[..., None] * s + jnp.einsum("bhjk,bhjv->bhkv", kd, vc32)
+        return s_new, (y_intra + y_inter).astype(q.dtype)
+
+    s_final, ys = jax.lax.scan(body, s0.astype(jnp.float32), (qs, ks, vs, als, bs))
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, l, vv)
+    return y, s_final
+
+
+def gla_ref(q, k, v, log_a, gate_b, s0):
+    """Sequential oracle (per-timestep scan) used by property tests."""
+    def body(s, xs):
+        qt, kt, vt, at, bt = xs      # (B,H,K), (B,H,K), (B,H,V), (B,H), (B,H)
+        s = jnp.exp(at)[..., None, None] * s + bt[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        y = jnp.einsum("bhk,bhkv->bhv", qt, s)
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v))
+    xs = xs + tuple(jnp.moveaxis(x, 2, 0) for x in (log_a, gate_b))
+    s, ys = jax.lax.scan(body, s0.astype(jnp.float32),
+                         tuple(x.astype(jnp.float32) for x in xs))
+    return jnp.moveaxis(ys, 0, 2).astype(q.dtype), s
+
+
+def gla_step(q, k, v, log_a, gate_b, s):
+    """One decode step. q/k: (B,H,K); v: (B,H,V); gates: (B,H); s: (B,H,K,V)."""
+    s = jnp.exp(log_a.astype(jnp.float32))[..., None, None] * s + \
+        gate_b.astype(jnp.float32)[..., None, None] * (
+            k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), s)
+    return y.astype(q.dtype), s

@@ -1,0 +1,111 @@
+"""Shared neural building blocks (pure functions over pytree params)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# -- initialisers -------------------------------------------------------------
+def dense_init(key, shape: Tuple[int, ...], dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# -- rotary -------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, hd); positions: (L,) or broadcastable to x[..., :, 0]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- FFN ----------------------------------------------------------------------
+def swiglu_init(key, d: int, ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d, 2 * ff), dtype),    # [gate | up] fused
+        "w_out": dense_init(k2, (ff, d), dtype, fan_in=ff),
+    }
+
+
+def swiglu_apply(params, x: jax.Array) -> jax.Array:
+    from repro.sharding.rules import BATCH_AXES, shard_hint
+
+    ff = params["w_out"].shape[0]
+    gate_up = (x @ params["w_in"].astype(x.dtype)).reshape(x.shape[:-1] + (2, ff))
+    gate_up = shard_hint(gate_up, BATCH_AXES, None, None, "model")
+    out = (jax.nn.silu(gate_up[..., 0, :]) * gate_up[..., 1, :]) @ params["w_out"].astype(x.dtype)
+    return shard_hint(out, BATCH_AXES, None, None)
+
+
+# -- loss ---------------------------------------------------------------------
+def chunked_cross_entropy(
+    hidden: jax.Array,       # (B, L, d)
+    embed: jax.Array,        # (V, d)  (tied head) or head matrix (d, V)
+    labels: jax.Array,       # (B, L) int32
+    mask: jax.Array | None = None,
+    chunk: int = 512,
+    transpose_head: bool = True,
+) -> jax.Array:
+    """Cross-entropy without materialising (B, L, V) logits.
+
+    Scans over sequence chunks; peak memory is (B, chunk, V). Crucial for the
+    262k-vocab gemma3 cells.
+    """
+    b, l, d = hidden.shape
+    chunk = min(chunk, l)
+    while l % chunk:  # static: largest divisor of l not above chunk
+        chunk -= 1
+    head = embed.T if transpose_head else embed   # (d, V)
+    if mask is None:
+        mask = jnp.ones((b, l), jnp.float32)
+
+    from repro.sharding.rules import BATCH_AXES, shard_hint
+
+    @jax.checkpoint  # never store (B, chunk, V) logits for backward
+    def body(carry, xs):
+        h, y, m = xs                                  # (B, chunk, d), (B, chunk), (B, chunk)
+        h = shard_hint(h, BATCH_AXES, None, None)
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        logits = shard_hint(logits, BATCH_AXES, None, "model")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - gold) * m)
+        return carry + loss, None
+
+    hs = hidden.reshape(b, l // chunk, chunk, d).swapaxes(0, 1)
+    ys = labels.reshape(b, l // chunk, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, l // chunk, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), (hs, ys, ms))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,149 @@
+"""Unified LM: init / forward / loss / prefill / decode for every family.
+
+Families:
+  decoder-only ("dense"/"moe"/"ssm"/"hybrid"/"vlm"): tokens -> logits.
+  encoder-decoder ("audio", whisper): stubbed frame embeddings -> encoder;
+  tokens -> decoder with cross attention (frontend conv stack is a stub per
+  the assignment: `input_specs()` supplies precomputed frame embeddings).
+
+The LM head is tied to the embedding by default; the loss never materialises
+(B, L, V) logits (layers.chunked_cross_entropy).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import chunked_cross_entropy, dense_init, embed_init, rms_norm
+from repro.models.stack import (
+    shared_block_init,
+    stack_apply,
+    stack_cache_init,
+    stack_decode,
+    stack_init,
+    stack_prefill,
+)
+
+AUX_WEIGHT = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _has_shared(cfg: ModelConfig) -> bool:
+    return any("attn_shared" in blocks for blocks, _ in cfg.segments)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    pdt = _pdtype(cfg)
+    key, k_embed, k_stack, k_shared, k_enc, k_head = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, pdt),
+        "final_scale": jnp.zeros((cfg.d_model,), pdt),
+        "segments": stack_init(k_stack, cfg, cfg.segments, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), pdt)
+    if _has_shared(cfg):
+        params["shared"] = shared_block_init(k_shared, cfg, pdt)
+    if cfg.is_encoder_decoder:
+        params["enc_segments"] = stack_init(k_enc, cfg, cfg.encoder_segments, pdt)
+        params["enc_final_scale"] = jnp.zeros((cfg.d_model,), pdt)
+    return params
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, remat: str = "none") -> jax.Array:
+    """Encoder side (whisper): frames (B, T, d) stub embeddings -> (B, T, d)."""
+    x = frames.astype(_dtype(cfg))
+    positions = jnp.arange(x.shape[1])
+    x, _ = stack_apply(params["enc_segments"], cfg, cfg.encoder_segments, x,
+                       positions=positions, remat=remat)
+    return rms_norm(x, params["enc_final_scale"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            remat: str = "none") -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, L, d), aux loss)."""
+    from repro.sharding.rules import BATCH_AXES, shard_hint
+
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    x = shard_hint(x, BATCH_AXES, None, None)
+    positions = jnp.arange(tokens.shape[1])
+    shared = params.get("shared")
+    enc_out = encode(cfg, params, batch["frames"], remat) if cfg.is_encoder_decoder else None
+    x, aux = stack_apply(params["segments"], cfg, cfg.segments, x,
+                         positions=positions, shared=shared, enc_out=enc_out, remat=remat)
+    return rms_norm(x, params["final_scale"], cfg.norm_eps), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            remat: str = "none") -> jax.Array:
+    hidden, aux = forward(cfg, params, batch, remat)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_cross_entropy(hidden, head, batch["labels"],
+                               mask=batch.get("mask"),
+                               transpose_head=cfg.tie_embeddings)
+    return ce + AUX_WEIGHT * aux
+
+
+def logits_for(cfg: ModelConfig, params, hidden: jax.Array) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    h = head.T if cfg.tie_embeddings else head
+    return (hidden @ h.astype(hidden.dtype)).astype(jnp.float32)
+
+
+# -------------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    dt = _dtype(cfg)
+    return stack_cache_init(cfg, cfg.segments, batch, max_seq, dt, enc_len=cfg.encoder_len)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int):
+    """Run the prompt through the stack, filling caches. Returns (last_logits, caches)."""
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    caches = init_cache(cfg, b, max_seq)
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    positions = jnp.arange(l)
+    shared = params.get("shared")
+    enc_out = encode(cfg, params, batch["frames"]) if cfg.is_encoder_decoder else None
+    if cfg.is_encoder_decoder:
+        # compute & store cross-attention KV once
+        from repro.models.attention import cross_kv
+
+        def fill_cross(seg_params, seg_cache):
+            def body(_, xs):
+                layer_params, layer_cache = xs
+                out = dict(layer_cache)
+                k, v = cross_kv(layer_params["b0"]["cross"], cfg, enc_out)
+                out["b0"] = dict(layer_cache["b0"], cross_k=k.astype(_dtype(cfg)),
+                                 cross_v=v.astype(_dtype(cfg)))
+                return 0, out
+
+            _, new = jax.lax.scan(body, 0, (seg_params, seg_cache))
+            return new
+
+        caches = [fill_cross(sp, sc) for sp, sc in zip(params["segments"], caches)]
+    x, caches = stack_prefill(params["segments"], caches, cfg, cfg.segments, x,
+                              positions=positions, shared=shared, enc_out=enc_out)
+    x = rms_norm(x, params["final_scale"], cfg.norm_eps)
+    return logits_for(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens: jax.Array, pos):
+    """tokens: (B, 1) the token decoded at absolute position `pos`."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    shared = params.get("shared")
+    x, caches = stack_decode(params["segments"], caches, cfg, cfg.segments, x,
+                             jnp.asarray(pos), shared=shared)
+    x = rms_norm(x, params["final_scale"], cfg.norm_eps)
+    return logits_for(cfg, params, x)[:, 0], caches

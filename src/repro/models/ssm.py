@@ -1,0 +1,299 @@
+"""SSM / recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba2.
+
+All three expose (init, apply, cache_init, decode) with uniform signatures so
+the stack machinery treats them like attention blocks. Recurrent state is the
+"KV cache" of these blocks — O(1) in sequence length, which is what makes the
+long_500k decode cells feasible.
+
+Simplifications vs. the reference implementations (documented in DESIGN.md):
+  - mLSTM: exp input gate / sigmoid forget gate without the running-max
+    stabiliser (gates ≤ 1 keep the chunked form stable); denominator uses the
+    ones-column trick (v is augmented with 1s so the normaliser n_t rides
+    along in the same GLA state).
+  - Mamba2: single B/C group (G=1), per-head scalar A.
+  - sLSTM: exp forget-gate variant with the m_t stabiliser, block-diagonal
+    recurrent weights per head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import gla_chunked, gla_step
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.rules import BATCH_AXES, shard_hint
+
+
+# ======================================================================= mLSTM
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.expand * d
+    h = cfg.num_heads
+    k_dim = di // h  # qk head dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, di), dtype),
+        "w_z": dense_init(ks[1], (d, di), dtype),
+        "w_q": dense_init(ks[2], (di, di), dtype, fan_in=di),
+        "w_k": dense_init(ks[3], (di, di), dtype, fan_in=di),
+        "w_g": dense_init(ks[4], (d, 2 * h), dtype),   # [ĩ | f̃] per head
+        "g_bias": jnp.concatenate([jnp.full((h,), -3.0), jnp.full((h,), 3.0)]).astype(dtype),
+        "o_scale": jnp.zeros((di,), dtype),
+        "w_down": dense_init(ks[5], (di, d), dtype, fan_in=di),
+    }
+
+
+class MLSTMState(NamedTuple):
+    s: jax.Array   # (B, H, K, V+1) matrix memory with normaliser column
+
+
+def mlstm_cache_init(cfg, batch: int, dtype) -> MLSTMState:
+    di = cfg.expand * cfg.d_model
+    h = cfg.num_heads
+    return MLSTMState(jnp.zeros((batch, h, di // h, di // h + 1), jnp.float32))
+
+
+def _mlstm_qkvg(params, cfg, x):
+    b, l, d = x.shape
+    di = cfg.expand * d
+    h = cfg.num_heads
+    hd = di // h
+    dt = x.dtype
+    xm = shard_hint(x @ params["w_x"].astype(dt), BATCH_AXES, None, "model")
+    z = shard_hint(x @ params["w_z"].astype(dt), BATCH_AXES, None, "model")
+    q = (xm @ params["w_q"].astype(dt)).reshape(b, l, h, hd).swapaxes(1, 2) * (hd ** -0.5)
+    k = (xm @ params["w_k"].astype(dt)).reshape(b, l, h, hd).swapaxes(1, 2) * (hd ** -0.5)
+    v = xm.reshape(b, l, h, hd).swapaxes(1, 2)
+    q = shard_hint(q, BATCH_AXES, "model", None, None)
+    k = shard_hint(k, BATCH_AXES, "model", None, None)
+    v = shard_hint(v, BATCH_AXES, "model", None, None)
+    gates = x @ params["w_g"].astype(dt) + params["g_bias"].astype(dt)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)             # (B,L,H) each
+    log_a = -jax.nn.softplus(-f_pre.astype(jnp.float32)).swapaxes(1, 2)   # log σ(f̃) ≤ 0
+    gate_b = jnp.exp(jnp.minimum(i_pre.astype(jnp.float32), 0.0)).swapaxes(1, 2)  # ≤ 1
+    # augment v with ones so the normaliser is carried in the state
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    return q, k, v_aug, log_a, gate_b, z
+
+
+def _mlstm_out(params, cfg, y_aug, z, shape):
+    b, l, d = shape
+    di = cfg.expand * d
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    h = (y / jnp.maximum(jnp.abs(n), 1.0)).swapaxes(1, 2).reshape(b, l, di)
+    h = rms_norm(h, params["o_scale"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ params["w_down"].astype(h.dtype)
+
+
+def mlstm_apply(params, cfg, x, state: MLSTMState | None = None):
+    """Train/prefill. x: (B, L, d). Returns (out, new_state)."""
+    q, k, v_aug, log_a, gate_b, z = _mlstm_qkvg(params, cfg, x)
+    s0 = state.s if state is not None else jnp.zeros(
+        (x.shape[0], cfg.num_heads, q.shape[-1], v_aug.shape[-1]), jnp.float32)
+    y, s = gla_chunked(q, k, v_aug, log_a, gate_b, s0, cfg.ssm_chunk)
+    return _mlstm_out(params, cfg, y, z, x.shape), MLSTMState(s)
+
+
+def mlstm_decode(params, cfg, x, state: MLSTMState):
+    """x: (B, 1, d)."""
+    q, k, v_aug, log_a, gate_b, z = _mlstm_qkvg(params, cfg, x)
+    y, s = gla_step(q[:, :, 0], k[:, :, 0], v_aug[:, :, 0],
+                    log_a[:, :, 0], gate_b[:, :, 0], state.s)
+    return _mlstm_out(params, cfg, y[:, :, None], z, x.shape), MLSTMState(s)
+
+
+# ======================================================================= sLSTM
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ff = max(4 * d // 3, 8)
+    ks = jax.random.split(key, 4)
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dtype),           # x -> [i f z o]
+        "r": dense_init(ks[1], (h, hd, 4 * hd), dtype, fan_in=hd),  # recurrent, block-diag
+        "bias": jnp.concatenate([
+            jnp.full((d,), -3.0), jnp.full((d,), 3.0), jnp.zeros((2 * d,))
+        ]).astype(dtype),
+        # post-MLP (projection factor 4/3, GeLU)
+        "mlp_in": dense_init(ks[2], (d, ff), dtype),
+        "mlp_out": dense_init(ks[3], (ff, d), dtype, fan_in=ff),
+        "mlp_scale": jnp.zeros((d,), dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd)
+    n: jax.Array
+    m: jax.Array   # (B, H, 1) stabiliser
+    h: jax.Array   # (B, H, hd) previous hidden
+
+
+def slstm_cache_init(cfg, batch: int, dtype) -> SLSTMState:
+    h, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMState(z, z, jnp.full((batch, h, 1), -1e30, jnp.float32), z)
+
+
+def _slstm_cell(params, cfg, xt, state: SLSTMState):
+    """xt: (B, d) one timestep. Stabilised exp-gate sLSTM."""
+    b, d = xt.shape
+    hh, hd = cfg.num_heads, d // cfg.num_heads
+    pre = (xt @ params["w"].astype(xt.dtype) + params["bias"].astype(xt.dtype)).astype(jnp.float32)
+    pre = pre.reshape(b, 4, hh, hd).swapaxes(1, 2)          # (B, H, 4, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", state.h, params["r"].astype(jnp.float32))
+    pre = pre + rec.reshape(b, hh, 4, hd)
+    i_pre, f_pre, z_pre, o_pre = pre[:, :, 0], pre[:, :, 1], pre[:, :, 2], pre[:, :, 3]
+    # stabiliser over per-head max (scalar per head keeps gates coupled)
+    i_max = jnp.max(i_pre, axis=-1, keepdims=True)
+    f_max = jnp.max(f_pre, axis=-1, keepdims=True)
+    m_new = jnp.maximum(f_max + state.m, i_max)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(z_pre)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return h, SLSTMState(c, n, m_new, h)
+
+
+def _slstm_mlp(params, cfg, y):
+    yn = rms_norm(y, params["mlp_scale"], cfg.norm_eps)
+    return y + jax.nn.gelu(yn @ params["mlp_in"].astype(y.dtype)) @ params["mlp_out"].astype(y.dtype)
+
+
+def slstm_apply(params, cfg, x, state: SLSTMState | None = None):
+    b, l, d = x.shape
+    if state is None:
+        state = slstm_cache_init(cfg, b, x.dtype)
+
+    @jax.checkpoint  # recompute gate pre-activations in backward
+    def body(st, xt):
+        h, st = _slstm_cell(params, cfg, xt, st)
+        return st, h
+
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, l, d).astype(x.dtype)
+    return _slstm_mlp(params, cfg, y), state
+
+
+def slstm_decode(params, cfg, x, state: SLSTMState):
+    b, _, d = x.shape
+    h, state = _slstm_cell(params, cfg, x[:, 0], state)
+    y = h.reshape(b, 1, d).astype(x.dtype)
+    return _slstm_mlp(params, cfg, y), state
+
+
+# ====================================================================== Mamba2
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.expand * d
+    h = cfg.num_heads
+    n = cfg.ssm_state
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),  # [z | x | B | C | dt]
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "o_scale": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[3], (di, d), dtype, fan_in=di),
+    }
+
+
+class Mamba2State(NamedTuple):
+    s: jax.Array      # (B, H, N, P) SSD state
+    conv: jax.Array   # (B, W-1, di+2N) conv tail
+
+
+def mamba2_cache_init(cfg, batch: int, dtype) -> Mamba2State:
+    di = cfg.expand * cfg.d_model
+    h, n = cfg.num_heads, cfg.ssm_state
+    return Mamba2State(
+        jnp.zeros((batch, h, n, di // h), jnp.float32),
+        jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    )
+
+
+def _mamba2_proj(params, cfg, x):
+    di = cfg.expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.num_heads
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * n]
+    dt_pre = zxbcdt[..., -h:]
+    return z, xbc, dt_pre
+
+
+def _mamba2_ssd_inputs(params, cfg, xbc, dt_pre, b, l):
+    di = cfg.expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.num_heads
+    p = di // h
+    xs = xbc[..., :di]
+    bs = xbc[..., di: di + n]
+    cs = xbc[..., di + n:]
+    xs = jax.nn.silu(xs)
+    bs = jax.nn.silu(bs)
+    cs = jax.nn.silu(cs)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (H,)
+    log_a = (a[None, None] * dt).swapaxes(1, 2)                # (B,H,L) <= 0
+    gate_b = dt.swapaxes(1, 2)                                 # (B,H,L)
+    v = xs.reshape(b, l, h, p).swapaxes(1, 2)                  # (B,H,L,P)
+    k = jnp.broadcast_to(bs[:, None], (b, h, l, n))            # shared across heads (G=1)
+    q = jnp.broadcast_to(cs[:, None], (b, h, l, n))
+    v = shard_hint(v, BATCH_AXES, "model", None, None)
+    k = shard_hint(k, BATCH_AXES, "model", None, None)
+    q = shard_hint(q, BATCH_AXES, "model", None, None)
+    return q, k, v, log_a, gate_b, xs
+
+
+def _mamba2_out(params, cfg, y, xs, z, shape):
+    b, l, d = shape
+    di = cfg.expand * d
+    h = cfg.num_heads
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None, None] * \
+        xs.reshape(b, l, h, di // h).swapaxes(1, 2)
+    y = y.swapaxes(1, 2).reshape(b, l, di).astype(z.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["o_scale"], cfg.norm_eps)
+    return y @ params["w_out"].astype(y.dtype)
+
+
+def mamba2_apply(params, cfg, x, state: Mamba2State | None = None):
+    b, l, d = x.shape
+    z, xbc, dt_pre = _mamba2_proj(params, cfg, x)
+    # causal depthwise conv (width W); prepend cached tail when decoding chunks
+    w = cfg.conv_width
+    tail = state.conv if state is not None else jnp.zeros((b, w - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], axis=1)
+    idx = jnp.arange(l)[:, None] + jnp.arange(w)[None, :]      # (L, W)
+    windows = padded[:, idx]                                    # (B, L, W, C)
+    xbc_conv = jnp.einsum("blwc,wc->blc", windows, params["conv_w"].astype(xbc.dtype)) \
+        + params["conv_b"].astype(xbc.dtype)
+    new_tail = padded[:, l:]                                    # last W-1 entries
+
+    q, k, v, log_a, gate_b, xs = _mamba2_ssd_inputs(params, cfg, xbc_conv, dt_pre, b, l)
+    s0 = state.s if state is not None else jnp.zeros(
+        (b, cfg.num_heads, cfg.ssm_state, v.shape[-1]), jnp.float32)
+    y, s = gla_chunked(q, k, v, log_a, gate_b, s0, cfg.ssm_chunk)
+    out = _mamba2_out(params, cfg, y, xs, z, x.shape)
+    return out, Mamba2State(s, new_tail)
+
+
+def mamba2_decode(params, cfg, x, state: Mamba2State):
+    b, _, d = x.shape
+    z, xbc, dt_pre = _mamba2_proj(params, cfg, x)
+    w = cfg.conv_width
+    window = jnp.concatenate([state.conv, xbc], axis=1)        # (B, W, C)
+    xbc_conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"].astype(xbc.dtype))[:, None] \
+        + params["conv_b"].astype(xbc.dtype)
+    new_tail = window[:, 1:]
+    q, k, v, log_a, gate_b, xs = _mamba2_ssd_inputs(params, cfg, xbc_conv, dt_pre, b, 1)
+    y, s = gla_step(q[:, :, 0], k[:, :, 0], v[:, :, 0], log_a[:, :, 0], gate_b[:, :, 0], state.s)
+    out = _mamba2_out(params, cfg, y[:, :, None], xs, z, x.shape)
+    return out, Mamba2State(s, new_tail)

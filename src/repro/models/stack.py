@@ -1,0 +1,263 @@
+"""Segment-scan stack machinery: block dispatch + scan-over-layers.
+
+A model is a sequence of segments ((block_types, repeat), ...). Parameters
+for a segment are stacked along a leading `repeat` axis and consumed by
+`lax.scan`, so compile time and HLO size are O(pattern), not O(depth) —
+a hard requirement for the 62-layer dry-run cells on this 1-core host and
+for real-world compile latency at scale.
+
+Caches mirror the parameter stacking: each segment carries a pytree whose
+leaves have leading dim `repeat`; prefill/decode scan over (params, cache)
+jointly and emit the updated cache as scan outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    KVCache,
+    cross_apply,
+    cross_init,
+    cross_kv,
+    gqa_apply,
+    gqa_cache_init,
+    gqa_init,
+    mla_apply,
+    mla_cache_init,
+    mla_init,
+)
+from repro.models.layers import rms_norm, swiglu_apply, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import (
+    mamba2_apply,
+    mamba2_cache_init,
+    mamba2_decode,
+    mamba2_init,
+    mlstm_apply,
+    mlstm_cache_init,
+    mlstm_decode,
+    mlstm_init,
+    slstm_apply,
+    slstm_cache_init,
+    slstm_decode,
+    slstm_init,
+)
+
+ATTN_KINDS = ("full", "swa", "enc", "full_moe", "attn_shared")
+SSM_KINDS = ("mlstm", "slstm", "mamba2")
+
+
+# ------------------------------------------------------------------ block init
+def block_init(key, cfg, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    ln1 = jnp.zeros((d,), dtype)
+    if kind in ("full", "swa", "enc"):
+        return {"ln1": ln1, "attn": gqa_init(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((d,), dtype), "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype)}
+    if kind == "full_moe":
+        return {"ln1": ln1, "attn": gqa_init(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((d,), dtype), "moe": moe_init(ks[1], cfg, dtype)}
+    if kind == "mla":
+        return {"ln1": ln1, "attn": mla_init(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((d,), dtype), "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype)}
+    if kind == "dec":
+        return {"ln1": ln1, "attn": gqa_init(ks[0], cfg, dtype),
+                "ln_x": jnp.zeros((d,), dtype), "cross": cross_init(ks[1], cfg, dtype),
+                "ln2": jnp.zeros((d,), dtype), "mlp": swiglu_init(ks[2], d, cfg.d_ff, dtype)}
+    if kind == "attn_shared":
+        # weights live once at top level (params["shared"]); per-site norms only
+        return {"ln1": ln1, "ln2": jnp.zeros((d,), dtype)}
+    if kind == "mlstm":
+        return {"ln1": ln1, "cell": mlstm_init(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln1": ln1, "cell": slstm_init(ks[0], cfg, dtype)}
+    if kind == "mamba2":
+        return {"ln1": ln1, "cell": mamba2_init(ks[0], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def shared_block_init(key, cfg, dtype):
+    """zamba2-style shared attention+FFN weights (applied at every site)."""
+    k1, k2 = jax.random.split(key)
+    return {"attn": gqa_init(k1, cfg, dtype), "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+# ----------------------------------------------------------------- block apply
+def block_apply(params, cfg, kind: str, x, *, positions, shared=None, enc_out=None,
+                cache=None, cache_pos=None):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.asarray(0.0, jnp.float32)
+    new_cache = None
+    if kind in ("full", "swa", "full_moe", "attn_shared", "enc"):
+        attn_params = shared["attn"] if kind == "attn_shared" else params["attn"]
+        window = cfg.window if kind == "swa" else 0
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        o, new_cache = gqa_apply(
+            attn_params, cfg, h, window=window, positions=positions,
+            cache=cache, cache_pos=cache_pos, causal=(kind != "enc"))
+        x = x + o
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        if kind == "full_moe":
+            o, aux = moe_apply(params["moe"], cfg, h)
+        elif kind == "attn_shared":
+            o = swiglu_apply(shared["mlp"], h)
+        else:
+            o = swiglu_apply(params["mlp"], h)
+        x = x + o
+        return x, aux, new_cache
+    if kind == "mla":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        o, new_cache = mla_apply(params["attn"], cfg, h, positions=positions,
+                                 cache=cache, cache_pos=cache_pos)
+        x = x + o
+        x = x + swiglu_apply(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps))
+        return x, aux, new_cache
+    if kind == "dec":
+        self_cache = cache["self"] if cache is not None else None
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        o, new_self = gqa_apply(params["attn"], cfg, h, positions=positions,
+                                cache=self_cache, cache_pos=cache_pos, causal=True)
+        x = x + o
+        h = rms_norm(x, params["ln_x"], cfg.norm_eps)
+        if cache is not None and "cross_k" in cache:
+            kv = (cache["cross_k"], cache["cross_v"])
+        else:
+            kv = cross_kv(params["cross"], cfg, enc_out)
+        x = x + cross_apply(params["cross"], cfg, h, kv)
+        x = x + swiglu_apply(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps))
+        if cache is not None:
+            new_cache = dict(cache, self=new_self)
+        return x, aux, new_cache
+    if kind in SSM_KINDS:
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        fns = {"mlstm": (mlstm_apply, mlstm_decode),
+               "slstm": (slstm_apply, slstm_decode),
+               "mamba2": (mamba2_apply, mamba2_decode)}[kind]
+        is_decode = cache is not None and x.shape[1] == 1
+        o, new_cache = (fns[1] if is_decode else fns[0])(params["cell"], cfg, h, cache)
+        return x + o, aux, new_cache
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ----------------------------------------------------------------- block cache
+def block_cache_init(cfg, kind: str, batch: int, max_seq: int, dtype, enc_len: int = 0):
+    if kind in ("full", "full_moe", "attn_shared", "enc"):
+        return gqa_cache_init(cfg, batch, max_seq, 0, dtype)
+    if kind == "swa":
+        return gqa_cache_init(cfg, batch, max_seq, cfg.window, dtype)
+    if kind == "mla":
+        return mla_cache_init(cfg, batch, max_seq, dtype)
+    if kind == "dec":
+        hd = cfg.hd
+        return {
+            "self": gqa_cache_init(cfg, batch, max_seq, 0, dtype),
+            "cross_k": jnp.zeros((batch, cfg.num_heads, enc_len, hd), dtype),
+            "cross_v": jnp.zeros((batch, cfg.num_heads, enc_len, hd), dtype),
+        }
+    if kind == "mlstm":
+        return mlstm_cache_init(cfg, batch, dtype)
+    if kind == "slstm":
+        return slstm_cache_init(cfg, batch, dtype)
+    if kind == "mamba2":
+        return mamba2_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------- segment init
+def stack_init(key, cfg, segments, dtype):
+    seg_params = []
+    for blocks, rep in segments:
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, rep)
+
+        def init_one(k, blocks=blocks):
+            ks = jax.random.split(k, len(blocks))
+            return {f"b{i}": block_init(ks[i], cfg, kind, dtype)
+                    for i, kind in enumerate(blocks)}
+
+        seg_params.append(jax.vmap(init_one)(keys))
+    return seg_params
+
+
+def stack_cache_init(cfg, segments, batch: int, max_seq: int, dtype, enc_len: int = 0):
+    caches = []
+    for blocks, rep in segments:
+        one = {f"b{i}": block_cache_init(cfg, kind, batch, max_seq, dtype, enc_len)
+               for i, kind in enumerate(blocks)}
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (rep,) + x.shape).copy(), one))
+    return caches
+
+
+# -------------------------------------------------------------- forward passes
+def stack_apply(seg_params, cfg, segments, x, *, positions, shared=None, enc_out=None,
+                remat: str = "none"):
+    """Train forward (no cache). Returns (x, total aux loss)."""
+    aux_total = jnp.asarray(0.0, jnp.float32)
+    for (blocks, rep), params in zip(segments, seg_params):
+
+        def body(carry, layer_params, blocks=blocks):
+            h, aux = carry
+            from repro.sharding.rules import BATCH_AXES, shard_hint
+
+            h = shard_hint(h, BATCH_AXES, None, None)
+            for i, kind in enumerate(blocks):
+                h, a, _ = block_apply(layer_params[f"b{i}"], cfg, kind, h,
+                                      positions=positions, shared=shared, enc_out=enc_out)
+                aux = aux + a
+            return (h, aux), None
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params)
+    return x, aux_total
+
+
+def stack_prefill(seg_params, caches, cfg, segments, x, *, positions, shared=None,
+                  enc_out=None):
+    """Prefill: forward while writing caches at positions [0, L)."""
+    new_caches = []
+    for (blocks, rep), params, cache in zip(segments, seg_params, caches):
+
+        def body(h, xs, blocks=blocks):
+            layer_params, layer_cache = xs
+            new_layer = {}
+            for i, kind in enumerate(blocks):
+                h, _, c = block_apply(layer_params[f"b{i}"], cfg, kind, h,
+                                      positions=positions, shared=shared, enc_out=enc_out,
+                                      cache=layer_cache[f"b{i}"], cache_pos=0)
+                new_layer[f"b{i}"] = c
+            return h, new_layer
+
+        x, new_cache = jax.lax.scan(body, x, (params, cache))
+        new_caches.append(new_cache)
+    return x, new_caches
+
+
+def stack_decode(seg_params, caches, cfg, segments, x, pos, *, shared=None):
+    """One-token decode. x: (B, 1, d); pos: scalar absolute position."""
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    new_caches = []
+    for (blocks, rep), params, cache in zip(segments, seg_params, caches):
+
+        def body(h, xs, blocks=blocks):
+            layer_params, layer_cache = xs
+            new_layer = {}
+            for i, kind in enumerate(blocks):
+                h, _, c = block_apply(layer_params[f"b{i}"], cfg, kind, h,
+                                      positions=positions, shared=shared,
+                                      cache=layer_cache[f"b{i}"], cache_pos=pos)
+                new_layer[f"b{i}"] = c
+            return h, new_layer
+
+        x, new_cache = jax.lax.scan(body, x, (params, cache))
+        new_caches.append(new_cache)
+    return x, new_caches

@@ -1,0 +1,84 @@
+"""Pure-JAX policy/value networks (init/apply pairs, pytree params)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Activation = {
+    "elu": jax.nn.elu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = sizes[i]
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1]), dtype) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((sizes[i + 1],), dtype)
+        params.append({"w": w, "b": b})
+    return params
+
+
+def mlp_apply(params, x, activation: str = "elu"):
+    act = Activation[activation]
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def cnn_init(key, in_hw: Tuple[int, int], channels=(16, 32), dense=256, out=2, dtype=jnp.float32):
+    """Nature-DQN-lite conv net for (H, W) grayscale frames."""
+    h, w = in_hw
+    specs = [  # (kh, kw, stride)
+        (8, 8, 4),
+        (4, 4, 2),
+    ]
+    params = {"convs": [], "dense": None, "out": None}
+    cin = 1
+    for (kh, kw, s), cout in zip(specs, channels):
+        key, sub = jax.random.split(key)
+        fan_in = kh * kw * cin
+        params["convs"].append({
+            "w": jax.random.normal(sub, (kh, kw, cin, cout), dtype) * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((cout,), dtype),
+            "stride": s,
+        })
+        h = (h - kh) // s + 1
+        w = (w - kw) // s + 1
+        cin = cout
+    flat = h * w * cin
+    key, k1, k2 = jax.random.split(key, 3)
+    params["dense"] = {
+        "w": jax.random.normal(k1, (flat, dense), dtype) * jnp.sqrt(2.0 / flat),
+        "b": jnp.zeros((dense,), dtype),
+    }
+    params["out"] = {
+        "w": jax.random.normal(k2, (dense, out), dtype) * jnp.sqrt(2.0 / dense),
+        "b": jnp.zeros((out,), dtype),
+    }
+    return params
+
+
+def cnn_apply(params, x, activation: str = "elu"):
+    """x: (..., H, W) grayscale in [0,1] -> (..., out)."""
+    act = Activation[activation]
+    batch_shape = x.shape[:-2]
+    x = x.reshape((-1,) + x.shape[-2:])[..., None]  # (B, H, W, 1)
+    for conv in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x, conv["w"], (conv["stride"], conv["stride"]), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + conv["b"]
+        x = act(x)
+    x = x.reshape(x.shape[0], -1)
+    x = act(x @ params["dense"]["w"] + params["dense"]["b"])
+    x = x @ params["out"]["w"] + params["out"]["b"]
+    return x.reshape(batch_shape + (x.shape[-1],))

@@ -1,0 +1,181 @@
+"""PPO on vectorised compiled envs — the policy-gradient learner of the toolkit.
+
+Rollout collection uses the paper-style `run()` fast path (lax.scan over the
+vectorised env), so experience generation is a single device program; the
+update (GAE + clipped surrogate, K epochs of minibatches) is a second one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.env import Env
+from repro.core.wrappers import AutoReset, Vec
+from repro.rl.networks import mlp_apply, mlp_init
+from repro.train.optim import Adam, AdamState
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    num_envs: int = 16
+    rollout_len: int = 128
+    epochs: int = 4
+    minibatches: int = 4
+    discount: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    lr: float = 3e-4
+    max_grad_norm: float = 0.5
+    units: Tuple[int, ...] = (64, 64)
+    activation: str = "tanh"
+
+
+class ACParams(NamedTuple):
+    torso: Any
+    pi: Any
+    vf: Any
+
+
+def ac_init(key, obs_dim: int, n_actions: int, cfg: PPOConfig) -> ACParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    torso = mlp_init(k1, (obs_dim,) + tuple(cfg.units))
+    pi = mlp_init(k2, (cfg.units[-1], n_actions))
+    vf = mlp_init(k3, (cfg.units[-1], 1))
+    return ACParams(torso, pi, vf)
+
+
+def ac_apply(params: ACParams, obs, activation="tanh"):
+    h = mlp_apply(params.torso, obs, activation)
+    h = jnp.tanh(h) if activation == "tanh" else jax.nn.elu(h)
+    logits = mlp_apply(params.pi, h, activation)
+    value = mlp_apply(params.vf, h, activation)[..., 0]
+    return logits, value
+
+
+class PPOState(NamedTuple):
+    params: ACParams
+    opt: AdamState
+    env_state: Any
+    obs: jax.Array
+    key: jax.Array
+    ep_return: jax.Array
+    last_return: jax.Array
+
+
+def ppo_init(env: Env, cfg: PPOConfig, key: jax.Array) -> PPOState:
+    key, knet, kenv = jax.random.split(key, 3)
+    obs_dim = int(np.prod(env.observation_space.shape))
+    params = ac_init(knet, obs_dim, env.action_space.n, cfg)
+    venv = Vec(AutoReset(env), cfg.num_envs)
+    env_state, obs = venv.reset(kenv)
+    opt = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm).init(params)
+    zeros = jnp.zeros((cfg.num_envs,), jnp.float32)
+    return PPOState(params, opt, env_state, obs, key, zeros, zeros)
+
+
+def _gae(rewards, values, dones, last_value, discount, lam):
+    def body(carry, xs):
+        adv = carry
+        r, v, d, v_next = xs
+        delta = r + discount * v_next * (1 - d) - v
+        adv = delta + discount * lam * (1 - d) * adv
+        return adv, adv
+
+    v_next = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    _, advs = jax.lax.scan(
+        body, jnp.zeros_like(last_value), (rewards, values, dones, v_next), reverse=True
+    )
+    return advs
+
+
+def make_update(env: Env, cfg: PPOConfig):
+    venv = Vec(AutoReset(env), cfg.num_envs)
+    optimizer = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm)
+
+    def collect(state: PPOState):
+        def step_fn(carry, _):
+            env_state, obs, key, ep_ret, last_ret = carry
+            key, k_act, k_env = jax.random.split(key, 3)
+            logits, value = ac_apply(state.params, obs, cfg.activation)
+            action = jax.random.categorical(k_act, logits)
+            logp = jax.nn.log_softmax(logits)[jnp.arange(cfg.num_envs), action]
+            ts = venv.step(env_state, action.astype(jnp.int32), k_env)
+            ep_ret = ep_ret + ts.reward
+            last_ret = jnp.where(ts.done, ep_ret, last_ret)
+            ep_ret = jnp.where(ts.done, 0.0, ep_ret)
+            out = (obs, action, logp, value, ts.reward, ts.done)
+            return (ts.state, ts.obs, key, ep_ret, last_ret), out
+
+        carry = (state.env_state, state.obs, state.key, state.ep_return, state.last_return)
+        (env_state, obs, key, ep_ret, last_ret), traj = jax.lax.scan(
+            step_fn, carry, None, length=cfg.rollout_len
+        )
+        return (env_state, obs, key, ep_ret, last_ret), traj
+
+    def loss_fn(params, batch):
+        obs, action, logp_old, adv, ret = batch
+        logits, value = ac_apply(params, obs, cfg.activation)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(obs.shape[0]), action]
+        ratio = jnp.exp(logp - logp_old)
+        pg = -jnp.mean(jnp.minimum(
+            ratio * adv, jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+        ))
+        vf = jnp.mean((value - ret) ** 2)
+        probs = jax.nn.softmax(logits)
+        ent = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-10), axis=-1))
+        return pg + cfg.vf_coef * vf - cfg.ent_coef * ent
+
+    @jax.jit
+    def update(state: PPOState):
+        (env_state, obs, key, ep_ret, last_ret), traj = collect(state)
+        t_obs, t_act, t_logp, t_val, t_rew, t_done = traj
+        _, last_value = ac_apply(state.params, obs, cfg.activation)
+        adv = _gae(t_rew, t_val, t_done.astype(jnp.float32), last_value, cfg.discount, cfg.gae_lambda)
+        ret = adv + t_val
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        n = cfg.rollout_len * cfg.num_envs
+        flat = lambda x: x.reshape((n,) + x.shape[2:])
+        data = (flat(t_obs), flat(t_act), flat(t_logp), flat(adv), flat(ret))
+
+        def epoch(carry, _):
+            params, opt, key = carry
+            key, kperm = jax.random.split(key)
+            perm = jax.random.permutation(kperm, n)
+            shuffled = tuple(x[perm] for x in data)
+            mb = n // cfg.minibatches
+
+            def mb_step(carry, i):
+                params, opt = carry
+                batch = tuple(jax.lax.dynamic_slice_in_dim(x, i * mb, mb) for x in shuffled)
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                params, opt = optimizer.update(grads, opt, params)
+                return (params, opt), loss
+
+            (params, opt), losses = jax.lax.scan(mb_step, (params, opt), jnp.arange(cfg.minibatches))
+            return (params, opt, key), losses.mean()
+
+        (params, opt, key), losses = jax.lax.scan(
+            epoch, (state.params, state.opt, key), None, length=cfg.epochs
+        )
+        new_state = PPOState(params, opt, env_state, obs, key, ep_ret, last_ret)
+        return new_state, {"loss": losses.mean(), "return": last_ret.mean()}
+
+    return update
+
+
+def train(env: Env, cfg: PPOConfig, updates: int, key: jax.Array):
+    state = ppo_init(env, cfg, key)
+    update = make_update(env, cfg)
+    history = []
+    for _ in range(updates):
+        state, metrics = update(state)
+        history.append(metrics)
+    metrics = jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+    return state, metrics

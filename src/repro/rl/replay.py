@@ -1,0 +1,63 @@
+"""Device-resident ring replay buffer (pytree state, fully jittable).
+
+The paper's DQN uses a 50 000-transition memory (Table I). Keeping it on
+device means the sample→learn path never leaves the accelerator — the same
+"stay in one memory space" principle as the renderer (§II-B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayState(NamedTuple):
+    obs: jax.Array        # (cap, *obs_shape)
+    action: jax.Array     # (cap, *act_shape)
+    reward: jax.Array     # (cap,)
+    next_obs: jax.Array   # (cap, *obs_shape)
+    done: jax.Array       # (cap,)
+    ptr: jax.Array        # ()
+    size: jax.Array       # ()
+
+
+def replay_init(capacity: int, obs_shape: Tuple[int, ...], act_shape: Tuple[int, ...] = (),
+                act_dtype=jnp.int32) -> ReplayState:
+    return ReplayState(
+        obs=jnp.zeros((capacity,) + obs_shape, jnp.float32),
+        action=jnp.zeros((capacity,) + act_shape, act_dtype),
+        reward=jnp.zeros((capacity,), jnp.float32),
+        next_obs=jnp.zeros((capacity,) + obs_shape, jnp.float32),
+        done=jnp.zeros((capacity,), jnp.float32),
+        ptr=jnp.asarray(0, jnp.int32),
+        size=jnp.asarray(0, jnp.int32),
+    )
+
+
+def replay_add_batch(state: ReplayState, obs, action, reward, next_obs, done) -> ReplayState:
+    """Insert a batch of B transitions at the ring pointer (wrapping)."""
+    cap = state.obs.shape[0]
+    b = obs.shape[0]
+    idx = (state.ptr + jnp.arange(b)) % cap
+    return ReplayState(
+        obs=state.obs.at[idx].set(obs),
+        action=state.action.at[idx].set(action),
+        reward=state.reward.at[idx].set(reward.astype(jnp.float32)),
+        next_obs=state.next_obs.at[idx].set(next_obs),
+        done=state.done.at[idx].set(done.astype(jnp.float32)),
+        ptr=(state.ptr + b) % cap,
+        size=jnp.minimum(state.size + b, cap),
+    )
+
+
+def replay_sample(state: ReplayState, key: jax.Array, batch: int):
+    """Uniform sample of `batch` transitions from the valid region."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(state.size, 1))
+    return (
+        state.obs[idx],
+        state.action[idx],
+        state.reward[idx],
+        state.next_obs[idx],
+        state.done[idx],
+    )

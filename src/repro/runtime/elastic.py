@@ -1,0 +1,47 @@
+"""Elastic scaling: re-mesh to whatever devices survive.
+
+Checkpoints are mesh-agnostic (checkpoint/manager.py stores gathered
+arrays), and the sharding rules are pure functions of (pytree, mesh) — so
+scaling from 512 → 384 → 256 chips is: propose a mesh, rebuild shardings,
+restore. The data pipeline slices by (step, host) so the stream is exact.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def propose_mesh(n_devices: int, prefer_model: int = 16) -> Tuple[tuple, tuple]:
+    """Largest (data, model) grid for n_devices; model axis capped/preferred.
+
+    Keeps the model axis a power-of-two ≤ prefer_model that divides
+    n_devices so TP sharding stays valid; leftover becomes data parallel.
+    """
+    if n_devices <= 0:
+        raise ValueError("no devices")
+    model = 1
+    m = prefer_model
+    while m > 1:
+        if n_devices % m == 0:
+            model = m
+            break
+        m //= 2
+    data = n_devices // model
+    return (data, model), ("data", "model")
+
+
+def build_mesh(n_devices: int | None = None, prefer_model: int = 16) -> Mesh:
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    shape, axes = propose_mesh(n, prefer_model)
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def reshard_state(state, mesh: Mesh):
+    """Re-place a (restored) state pytree onto a new mesh's shardings."""
+    from repro.sharding.rules import param_shardings
+
+    sh = param_shardings(state, mesh)
+    return jax.tree.map(jax.device_put, state, sh)

@@ -1,0 +1,131 @@
+"""Batched serving engine: prefill + decode with continuous slot refill.
+
+The decode step is one compiled program over a fixed-size slot batch
+(padding-free steady state); finished sequences free their slot and the
+host-side scheduler refills it by prefilling the next queued request into
+the same cache rows. This is the standard continuous-batching shape
+(vLLM-style, simplified to fixed slots) expressed in pure JAX:
+  - `prefill_into_slot` writes one request's cache rows at its slot index;
+  - `decode_step` advances every active slot by one token;
+  - inactive slots are masked by `active` so they cost no host logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    output: Optional[list] = None
+
+
+class EngineState(NamedTuple):
+    caches: Any
+    tokens: jax.Array      # (slots, 1) last token per slot
+    pos: jax.Array         # (slots,) next absolute position per slot
+    active: jax.Array      # (slots,) bool
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 8, max_seq: int = 2048,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self._queue: List[Request] = []
+        self._running: Dict[int, Request] = {}
+        caches = lm.init_cache(cfg, slots, max_seq)
+        self.state = EngineState(
+            caches=caches,
+            tokens=jnp.zeros((slots, 1), jnp.int32),
+            pos=jnp.zeros((slots,), jnp.int32),
+            active=jnp.zeros((slots,), bool),
+        )
+        self._slot_req: List[Optional[int]] = [None] * slots
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- device programs -------------------------------------------------
+    def _decode_impl(self, params, state: EngineState):
+        # one compiled step advances every slot; positions are PER-SLOT (the
+        # attention cache paths accept vector cache_pos), so heterogeneous
+        # requests share one program — continuous batching with fixed shapes.
+        logits, caches = lm.decode_step(self.cfg, params, state.caches,
+                                        state.tokens, state.pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = jnp.where(state.active, next_tok, state.tokens[:, 0])[:, None]
+        pos = jnp.where(state.active, state.pos + 1, state.pos)
+        return EngineState(caches, tokens, pos, state.active), next_tok
+
+    # -- host scheduler ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.output = []
+        self._queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self._queue:
+                break
+            req = self._queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            # prefill this request alone (batch 1) then splice its cache rows
+            logits, cache1 = lm.prefill(self.cfg, self.params,
+                                        {"tokens": prompt}, self.max_seq)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+            def splice(full, one):
+                return full.at[:, slot:slot + 1].set(one) if full.ndim >= 2 else full
+
+            caches = jax.tree.map(splice, self.state.caches, cache1)
+            self.state = EngineState(
+                caches=caches,
+                tokens=self.state.tokens.at[slot, 0].set(tok[0]),
+                pos=self.state.pos.at[slot].set(prompt.shape[1]),
+                active=self.state.active.at[slot].set(True),
+            )
+            req.output.append(int(tok[0]))
+            self._slot_req[slot] = req.rid
+            self._running[req.rid] = req
+
+    def step(self) -> None:
+        """One scheduler tick: admit, decode, retire."""
+        self._admit()
+        if not any(self._slot_req):
+            pass
+        self.state, next_tok = self._decode(self.params, self.state)
+        toks = np.asarray(next_tok)
+        for slot, rid in enumerate(self._slot_req):
+            if rid is None:
+                continue
+            req = self._running[rid]
+            req.output.append(int(toks[slot]))
+            done = len(req.output) >= req.max_new_tokens or (
+                req.eos_id is not None and toks[slot] == req.eos_id
+            ) or int(self.state.pos[slot]) >= self.max_seq - 1
+            if done:
+                self._slot_req[slot] = None
+                del self._running[rid]
+                self.state = self.state._replace(
+                    active=self.state.active.at[slot].set(False))
+
+    def run(self, max_ticks: int = 1000) -> None:
+        ticks = 0
+        while (self._queue or self._running) and ticks < max_ticks:
+            self.step()
+            ticks += 1

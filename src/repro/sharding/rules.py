@@ -1,0 +1,253 @@
+"""Logical-axis sharding rules: parameter/batch/cache PartitionSpecs.
+
+Strategy (MaxText-style TP×FSDP):
+  - tensor-parallel axis  = "model": attention heads, MLP hidden, vocab,
+    MoE experts.
+  - FSDP axis             = "data": the non-TP dim of each weight is sharded
+    over data so optimizer+param memory scales down with the data axis
+    (ZeRO-3); XLA inserts per-layer all-gathers that overlap with compute.
+  - multi-pod axis        = "pod": pure data parallelism — parameters are
+    replicated across pods and only gradient all-reduce crosses the
+    inter-pod links (the slowest links get the smallest, most compressible
+    traffic; see train/compression.py for the int8 path).
+  - batch dims shard over ("pod", "data"); the long_500k cells (batch=1)
+    shard the KV-cache *sequence* dim over ("pod", "data") instead
+    (sequence-parallel cache) and GSPMD turns the softmax reductions into
+    cross-shard collectives.
+
+Rules are name/path based so they apply to every architecture's pytree
+uniformly; leaves match by their innermost names with stacked scan dims
+padded with None on the left.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(mesh: Mesh):
+    return "data" if "data" in mesh.axis_names else None
+
+
+def tp_axis(mesh: Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+# Perf knob: shard MoE experts over model ONLY (replicate over data). Trades
+# per-device expert param/optimizer memory for zero per-layer FSDP gathers of
+# the expert bank — the §Perf collective fix for MoE train cells.
+_MOE_EP_ONLY = [False]
+
+
+def set_moe_ep_only(value: bool) -> None:
+    _MOE_EP_ONLY[0] = bool(value)
+
+
+# (path substring, leaf name) -> spec for the LAST len(spec) dims.
+# First match wins; missing leading dims are padded with None.
+_RULES = (
+    # embeddings / head
+    ("", "embed", ("model", "data")),          # (V, d): TP on vocab, FSDP on d
+    ("", "lm_head", ("data", "model")),
+    # MoE (match before generic w_in/w_out)
+    ("moe", "router", (None, None)),
+    ("moe", "w_in", ("model", "data", None)),   # (E, d, 2ff): EP + FSDP
+    ("moe", "w_out", ("model", None, "data")),
+    # attention
+    ("", "wq", ("data", "model")),
+    ("", "wk", ("data", "model")),
+    ("", "wv", ("data", "model")),
+    ("", "wo", ("model", "data")),
+    # MLA
+    ("", "w_dq", ("data", None)),
+    ("", "w_uq", (None, "model")),
+    ("", "w_dkv", ("data", None)),
+    ("", "w_ukv", (None, "model")),
+    # dense FFN
+    ("", "w_in", ("data", "model")),
+    ("", "w_out", ("model", "data")),
+    ("", "mlp_in", ("data", "model")),
+    ("", "mlp_out", ("model", "data")),
+    # ssm cells
+    ("cell", "w_x", ("data", "model")),
+    ("cell", "w_z", ("data", "model")),
+    ("cell", "w_q", (None, "model")),
+    ("cell", "w_k", (None, "model")),
+    ("cell", "w_g", ("data", None)),
+    ("cell", "w_down", ("model", "data")),
+    ("cell", "conv_w", (None, None)),
+    ("cell", "r", (None, None, None)),
+    ("cell", "o_scale", ("model",)),
+    ("cell", "w", ("data", None)),              # slstm input proj
+)
+
+
+def _spec_for(path: str, name: str, ndim: int, shape, mesh: Mesh) -> P:
+    axes_avail = set(mesh.axis_names)
+    rules = _RULES
+    if _MOE_EP_ONLY[0]:
+        rules = (("moe", "w_in", ("model", None, None)),
+                 ("moe", "w_out", ("model", None, None))) + _RULES
+    for substr, leaf, spec in rules:
+        if substr in path and name == leaf and ndim >= len(spec):
+            spec = tuple(a if (a in axes_avail) else None for a in spec)
+            # drop axes that do not divide the dim evenly
+            dims = shape[ndim - len(spec):]
+            cleaned = tuple(
+                a if (a is not None and dims[i] % mesh.shape[a] == 0) else None
+                for i, a in enumerate(spec)
+            )
+            return P(*((None,) * (ndim - len(cleaned)) + cleaned))
+    return P(*((None,) * ndim))  # replicate (norm scales, biases, gates)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: Pytree, mesh: Mesh) -> Pytree:
+    def spec(path, leaf):
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        return _spec_for(ps, name, leaf.ndim, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def opt_specs(opt_state: Pytree, params: Pytree, mesh: Mesh) -> Pytree:
+    """Adam mu/nu shard exactly like params; scalars replicate."""
+    pspecs = param_specs(params, mesh)
+
+    def match(leaf_spec):
+        return leaf_spec
+
+    mu = jax.tree.map(match, pspecs)
+    nu = jax.tree.map(match, pspecs)
+    from repro.train.optim import AdamState
+
+    return AdamState(step=P(), mu=mu, nu=nu)
+
+
+# -- batch / activation specs --------------------------------------------------
+def batch_specs(mesh: Mesh, batch_example: Pytree, batch_divisible: bool = True) -> Pytree:
+    """Shard dim0 (batch) of every array over (pod, data) when divisible."""
+    da = data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if batch_divisible and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return P(da, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_example)
+
+
+def cache_specs(mesh: Mesh, caches: Pytree, batch: int, seq_sharded: bool) -> Pytree:
+    """KV caches: (rep, B, H, S, hd) → heads on model; B or S on (pod,data).
+
+    seq_sharded=True is the long_500k mode: batch=1, so the sequence dim of
+    attention caches carries the data-parallel axes instead. SSM states have
+    no sequence dim and shard heads over model only.
+    """
+    da = data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    tp = tp_axis(mesh)
+    tp_n = mesh.shape[tp] if tp else 1
+
+    def spec(leaf):
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        dims = [None] * nd
+        # find a heads-like dim to TP-shard: any dim (not 0/batch) divisible by tp_n
+        # canonical layouts: (rep,B,H,S,hd) attn | (rep,B,H,K,V) ssm |
+        # (rep,B,S,r) mla | (rep,B,W,C) conv
+        if nd >= 4:
+            # dim2 is heads for attn/ssm caches (<=512) but seq for the MLA
+            # latent cache (>=1k) — only TP-shard genuine head dims.
+            if tp and leaf.shape[2] % tp_n == 0 and leaf.shape[2] <= 512:
+                dims[2] = tp
+            if seq_sharded and nd >= 5 and leaf.shape[3] % n == 0 and leaf.shape[3] > 1:
+                dims[3] = da
+            elif not seq_sharded and leaf.shape[1] % n == 0 and leaf.shape[1] >= n:
+                dims[1] = da
+        elif nd >= 2:
+            if not seq_sharded and leaf.shape[1] % n == 0 and leaf.shape[1] >= n:
+                dims[1] = da
+        return P(*dims)
+
+    return jax.tree.map(spec, caches)
+
+
+def shard_hint(x, *axes):
+    """with_sharding_constraint that degrades to a no-op off-mesh.
+
+    `axes` entries are mesh-axis names (or tuples of them) per dim; axes not
+    present in the ambient mesh, or not dividing the dim, are dropped. This
+    is how the model code pins activation layouts (batch on (pod, data),
+    heads/hidden on model) so GSPMD never falls into batch-replicated
+    layouts — without the model depending on any particular mesh.
+    """
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        mesh = None
+    if mesh is None or not mesh.axis_names:
+        try:  # legacy `with mesh:` context
+            from jax._src import mesh as _mesh_lib
+
+            mesh = _mesh_lib.thread_resources.env.physical_mesh
+        except Exception:  # pragma: no cover
+            return x
+    if mesh is None or not mesh.axis_names or getattr(mesh, "empty", False):
+        return x
+    names = set(mesh.axis_names)
+
+    def clean(dim, a):
+        if a is None:
+            return None
+        cand = tuple(ax for ax in ((a,) if isinstance(a, str) else a) if ax in names)
+        if not cand:
+            return None
+        size = int(np.prod([mesh.shape[ax] for ax in cand]))
+        if size == 0 or dim % size:
+            return None
+        return cand if len(cand) > 1 else cand[0]
+
+    spec = [clean(x.shape[i], axes[i]) if i < len(axes) else None
+            for i in range(x.ndim)]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+BATCH_AXES = ("pod", "data")
+
+
+def to_shardings(specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

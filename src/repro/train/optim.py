@@ -1,0 +1,133 @@
+"""Optimizers, schedules and gradient transforms — pure-JAX (no optax on box).
+
+Shared by the RL learners (DQN/PPO, Table I uses Adam) and the LM trainer
+(AdamW + cosine + global-norm clipping). Everything is a pytree-in/pytree-out
+pure function so optimizer state shards exactly like parameters (ZeRO-style:
+sharding/rules.py assigns optimizer-state PartitionSpecs from the param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW. lr may be a float or a schedule fn step->lr."""
+
+    lr: Any = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+
+    def init(self, params: Pytree) -> AdamState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamState(
+            step=jnp.asarray(0, jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads: Pytree, state: AdamState, params: Pytree) -> Tuple[Pytree, AdamState]:
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads)
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**t)
+        nu_hat_scale = 1.0 / (1 - b2**t)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p
+            return (p - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step, mu, nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Any = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return AdamState(jnp.asarray(0, jnp.int32), None, None)
+        return AdamState(jnp.asarray(0, jnp.int32), jax.tree.map(jnp.zeros_like, params), None)
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, AdamState(step, None, None)
+        mu = jax.tree.map(lambda m, g: self.momentum * m + g, state.mu, grads)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new, AdamState(step, mu, None)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree)
+
+
+# -- schedules ---------------------------------------------------------------
+def linear_schedule(start: float, end: float, steps: int) -> Callable:
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(steps, 1), 0.0, 1.0)
+        return start + frac * (end - start)
+
+    return fn
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+# -- losses shared by learners ----------------------------------------------
+def huber_loss(pred: jax.Array, target: jax.Array, delta: float = 1.0) -> jax.Array:
+    err = pred - target
+    abs_err = jnp.abs(err)
+    quad = jnp.minimum(abs_err, delta)
+    return 0.5 * quad**2 + delta * (abs_err - quad)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (..., V), integer labels (...). Returns per-position loss."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold

@@ -1,0 +1,87 @@
+"""Per-arch smoke tests (deliverable f): reduced config, one forward/train
+step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, cell_supported, get_config, input_specs
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    b, l = 2, 16
+    batch = {
+        "tokens": jax.random.randint(key, (b, l), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, l), 0, cfg.vocab_size),
+    }
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(key, (b, cfg.encoder_len, cfg.d_model))
+
+    hidden, aux = lm.forward(cfg, params, batch)
+    assert hidden.shape == (b, l, cfg.d_model)
+    assert not np.any(np.isnan(np.asarray(hidden)))
+    logits = lm.logits_for(cfg, params, hidden[:, -1:])
+    assert logits.shape == (b, 1, cfg.vocab_size)
+
+    # one gradient step
+    loss, grads = jax.value_and_grad(lambda p: lm.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorms = [float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, (arch, got, expect)
+    if arch == "olmoe-1b-7b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (64, 8)
+    if arch == "granite-moe-1b-a400m":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (32, 8)
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm_state == 64
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if cell_supported(arch, shape.name):
+                continue
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            tok = specs["tokens"]
+            if shape.kind == "decode":
+                assert tok.shape == (shape.global_batch, 1)
+            else:
+                assert tok.shape == (shape.global_batch, shape.seq_len)
+            if cfg.is_encoder_decoder and shape.kind != "decode":
+                assert specs["frames"].shape[0] == shape.global_batch
+
+
+def test_long_context_skips_documented():
+    skips = [a for a in ARCH_IDS if cell_supported(a, "long_500k")]
+    assert sorted(skips) == sorted(
+        ["yi-6b", "minicpm3-4b", "chameleon-34b", "whisper-base",
+         "olmoe-1b-7b", "granite-moe-1b-a400m"])

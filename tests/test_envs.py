@@ -1,0 +1,130 @@
+"""Environment dynamics: cross-validation against the pure-Python ports.
+
+The compiled envs and the interpreted baselines share constants, so driving
+both with the same action sequence from the same start state must produce
+the same trajectory — this pins the JAX dynamics to Gym's reference maths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make
+from repro.envs.baseline_python.classic import AcrobotPy, CartPolePy, MountainCarPy, PendulumPy
+from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
+from repro.envs.classic.cartpole import CartPoleState
+from repro.envs.classic.acrobot import AcrobotState
+from repro.envs.classic.mountain_car import MountainCarState
+from repro.envs.classic.pendulum import PendulumState
+
+
+def _drive(env, state, actions, to_state):
+    traj = []
+    for a in actions:
+        ts = env.step(state, jnp.asarray(a), jax.random.PRNGKey(0))
+        state = ts.state
+        traj.append(np.asarray(ts.obs))
+    return np.stack(traj)
+
+
+def test_cartpole_matches_python():
+    actions = [0, 1, 1, 0, 1, 0, 0, 1, 1, 1]
+    py = CartPolePy()
+    py.reset()
+    py.x, py.x_dot, py.theta, py.theta_dot = 0.01, -0.02, 0.03, 0.04
+    py_traj = [py.step(a)[0] for a in actions]
+    env = CartPole()
+    state = CartPoleState(*(jnp.asarray(v) for v in (0.01, -0.02, 0.03, 0.04)))
+    jx_traj = _drive(env, state, actions, CartPoleState)
+    np.testing.assert_allclose(jx_traj, np.asarray(py_traj), rtol=1e-5, atol=1e-6)
+
+
+def test_mountain_car_matches_python():
+    actions = [0, 2, 2, 2, 1, 0, 0, 2, 2, 0]
+    py = MountainCarPy()
+    py.reset()
+    py.position, py.velocity = -0.5, 0.0
+    py_traj = [py.step(a)[0] for a in actions]
+    env = MountainCar()
+    state = MountainCarState(jnp.asarray(-0.5), jnp.asarray(0.0))
+    jx_traj = _drive(env, state, actions, MountainCarState)
+    np.testing.assert_allclose(jx_traj, np.asarray(py_traj), rtol=1e-5, atol=1e-6)
+
+
+def test_acrobot_matches_python():
+    actions = [0, 2, 1, 2, 0, 1]
+    py = AcrobotPy()
+    py.reset()
+    py.s = [0.05, -0.03, 0.02, -0.01]
+    py_traj = [py.step(a)[0] for a in actions]
+    env = Acrobot()
+    state = AcrobotState(*(jnp.asarray(v) for v in (0.05, -0.03, 0.02, -0.01)))
+    jx_traj = _drive(env, state, actions, AcrobotState)
+    np.testing.assert_allclose(jx_traj, np.asarray(py_traj), rtol=1e-4, atol=1e-5)
+
+
+def test_pendulum_matches_python():
+    actions = [[0.5], [-1.0], [2.0], [0.0], [-2.0]]
+    py = PendulumPy()
+    py.reset()
+    py.theta, py.theta_dot = 0.3, -0.2
+    py_traj = [py.step(a)[0] for a in actions]
+    env = Pendulum()
+    state = PendulumState(jnp.asarray(0.3), jnp.asarray(-0.2))
+    jx_traj = _drive(env, state, [jnp.asarray(a) for a in actions], PendulumState)
+    np.testing.assert_allclose(jx_traj, np.asarray(py_traj), rtol=1e-5, atol=1e-6)
+
+
+def test_cartpole_terminates_at_bounds():
+    env = CartPole()
+    state = CartPoleState(jnp.asarray(2.39), jnp.asarray(5.0), jnp.asarray(0.0), jnp.asarray(0.0))
+    ts = env.step(state, jnp.asarray(1), jax.random.PRNGKey(0))
+    assert bool(ts.done)
+
+
+def test_mountain_car_goal():
+    env = MountainCar()
+    state = MountainCarState(jnp.asarray(0.49), jnp.asarray(0.07))
+    ts = env.step(state, jnp.asarray(2), jax.random.PRNGKey(0))
+    assert bool(ts.done)
+
+
+def test_multitask_fails_on_missed_ball():
+    from repro.envs.multitask import Multitask, MultitaskState
+
+    env = Multitask()
+    state = MultitaskState(
+        paddle_x=jnp.asarray(0.1), ball_x=jnp.asarray(0.9), ball_y=jnp.asarray(0.99),
+        lane=jnp.asarray(0, jnp.int32), obs_lane=jnp.asarray(2, jnp.int32),
+        obs_y=jnp.asarray(0.0), t=jnp.asarray(0, jnp.int32),
+    )
+    ts = env.step(state, jnp.asarray(1), jax.random.PRNGKey(0))
+    assert bool(ts.done)
+    assert float(ts.reward) < 0
+
+
+def test_lightsout_solver_solves():
+    from repro.envs.puzzle import LightsOut
+
+    env = LightsOut(n=4, scramble_presses=5)
+    key = jax.random.PRNGKey(5)
+    state, obs = env.reset(key)
+    presses = env.solve(np.asarray(state.board))
+    for p in presses:
+        ts = env.step(state, jnp.asarray(p), key)
+        state = ts.state
+    assert int(np.asarray(state.board).sum()) == 0
+    assert bool(ts.done)
+
+
+def test_autoreset_keeps_episodes_flowing():
+    from repro.core import AutoReset, Vec
+
+    env = Vec(AutoReset(make("MountainCar-v0")), 4)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    for i in range(250):  # > TimeLimit of 200 — must keep running via autoreset
+        actions = jnp.zeros((4,), jnp.int32)
+        ts = env.step(state, actions, jax.random.fold_in(key, i))
+        state = ts.state
+    assert np.all(np.isfinite(np.asarray(ts.obs)))

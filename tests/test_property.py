@@ -1,0 +1,112 @@
+"""Hypothesis property tests over the system's invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=20)
+hypothesis.settings.load_profile("ci")
+
+
+# -- GLA: chunked form ≡ sequential recurrence, any shape/chunk ------------------
+@given(
+    b=st.integers(1, 3), h=st.integers(1, 3), l=st.integers(1, 33),
+    k=st.integers(1, 9), v=st.integers(1, 9), chunk=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_gla_chunked_equals_ref(b, h, l, k, v, chunk, seed):
+    from repro.models.gla import gla_chunked, gla_ref
+
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, l, k))
+    kk = jax.random.normal(ks[1], (b, h, l, k))
+    vv = jax.random.normal(ks[2], (b, h, l, v))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, h, l)))
+    gate = jax.nn.sigmoid(jax.random.normal(ks[4], (b, h, l)))
+    s0 = jnp.zeros((b, h, k, v))
+    y1, s1 = gla_chunked(q, kk, vv, log_a, gate, s0, chunk)
+    y2, s2 = gla_ref(q, kk, vv, log_a, gate, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-3)
+
+
+# -- replay ring: size/ptr invariants under arbitrary add sequences ---------------
+@given(st.lists(st.integers(1, 7), min_size=1, max_size=12), st.integers(8, 32))
+def test_replay_invariants(batches, cap):
+    from repro.rl.replay import replay_add_batch, replay_init
+
+    st_ = replay_init(cap, (1,))
+    total = 0
+    for i, b in enumerate(batches):
+        obs = jnp.full((b, 1), float(i + 1))
+        st_ = replay_add_batch(st_, obs, jnp.zeros((b,), jnp.int32),
+                               jnp.zeros((b,)), obs, jnp.zeros((b,)))
+        total += b
+        assert int(st_.size) == min(total, cap)
+        assert 0 <= int(st_.ptr) < cap
+
+
+# -- spaces: samples are contained ------------------------------------------------
+@given(st.integers(1, 64), st.integers(0, 2**16))
+def test_discrete_sample_contained(n, seed):
+    from repro.core.spaces import Discrete
+
+    sp = Discrete(n)
+    assert bool(sp.contains(sp.sample(jax.random.PRNGKey(seed))))
+
+
+@given(st.floats(-5, 0), st.floats(0.1, 5), st.integers(1, 4), st.integers(0, 2**16))
+def test_box_sample_contained(low, width, dims, seed):
+    from repro.core.spaces import Box
+
+    sp = Box(low=low, high=low + width, shape=(dims,))
+    assert bool(sp.contains(sp.sample(jax.random.PRNGKey(seed))))
+
+
+# -- chunked CE == direct CE for any chunking --------------------------------------
+@given(st.integers(1, 3), st.integers(1, 24), st.integers(2, 40), st.integers(0, 2**16))
+def test_chunked_ce_property(b, l, v, seed):
+    from repro.models.layers import chunked_cross_entropy
+    from repro.train.optim import softmax_cross_entropy
+
+    key = jax.random.PRNGKey(seed)
+    d = 8
+    hidden = jax.random.normal(key, (b, l, d))
+    embed = jax.random.normal(jax.random.fold_in(key, 1), (v, d))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, l), 0, v)
+    # chunk sizes that don't divide l are snapped down by the impl
+    chunked = float(chunked_cross_entropy(hidden, embed, labels, chunk=5))
+    direct = float(softmax_cross_entropy(hidden @ embed.T, labels).mean())
+    np.testing.assert_allclose(chunked, direct, rtol=2e-4, atol=1e-5)
+
+
+# -- rasteriser: intensity monotonicity + bounds ------------------------------------
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(0, 2**16))
+def test_raster_bounds(b, s, seed):
+    from repro.kernels.raster import rasterize_ref
+
+    key = jax.random.PRNGKey(seed)
+    segs = jax.random.uniform(key, (b, s, 5)) * jnp.asarray([1, 1, 1, 1, 0.2])
+    intens = jax.random.uniform(jax.random.fold_in(key, 1), (b, s))
+    fb = rasterize_ref(segs, intens, 16, 16)
+    assert float(fb.min()) >= 0.0
+    assert float(fb.max()) <= float(intens.max()) + 1e-6
+
+
+# -- attention masks: window never widens the receptive field -----------------------
+@given(st.integers(4, 24), st.integers(1, 8), st.integers(0, 2**16))
+def test_window_subset_of_causal(l, w, seed):
+    from repro.kernels.attention import attention_ref
+
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 2, l, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, l, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, l, 8))
+    causal = attention_ref(q, k, v, causal=True, window=0)
+    windowed = attention_ref(q, k, v, causal=True, window=w)
+    # first w positions see identical context under both masks
+    np.testing.assert_allclose(np.asarray(causal[:, :, :w]), np.asarray(windowed[:, :, :w]),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,69 @@
+"""Wrapper semantics + space behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Box, Discrete, FlattenObs, MultiDiscrete, TimeLimit, Vec, make
+from repro.core.wrappers import ObsToPixels
+from repro.envs.classic import CartPole, Pendulum
+
+
+def test_discrete_sample_contains():
+    sp = Discrete(5)
+    for i in range(10):
+        s = sp.sample(jax.random.PRNGKey(i))
+        assert bool(sp.contains(s))
+    assert not bool(sp.contains(jnp.asarray(7)))
+
+
+def test_box_sample_bounds():
+    sp = Box(low=-2.0, high=2.0, shape=(3,))
+    s = sp.sample(jax.random.PRNGKey(0))
+    assert bool(sp.contains(s))
+
+
+def test_multidiscrete():
+    sp = MultiDiscrete((2, 3, 4))
+    s = sp.sample(jax.random.PRNGKey(0))
+    assert s.shape == (3,)
+    assert bool(sp.contains(s))
+
+
+def test_time_limit_truncates():
+    env = TimeLimit(Pendulum(), 5)  # pendulum never self-terminates
+    key = jax.random.PRNGKey(0)
+    state, _ = env.reset(key)
+    done = False
+    for i in range(5):
+        ts = env.step(state, jnp.asarray([0.0]), jax.random.fold_in(key, i))
+        state, done = ts.state, bool(ts.done)
+    assert done
+
+
+def test_flatten_obs():
+    env = FlattenObs(make("LightsOut-v0", n=3))
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.ndim == 1
+    assert env.observation_space.shape == (9,)
+
+
+def test_vec_batches_everything():
+    env = Vec(CartPole(), 6)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    assert obs.shape == (6, 4)
+    actions = env.sample_actions(jax.random.PRNGKey(1))
+    ts = env.step(state, actions, jax.random.PRNGKey(2))
+    assert ts.reward.shape == (6,)
+    frames = env.render(ts.state)
+    assert frames.shape == (6, 84, 84)
+
+
+def test_obs_to_pixels():
+    env = ObsToPixels(CartPole())
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.shape == (84, 84)
+    ts = env.step(state, jnp.asarray(1), jax.random.PRNGKey(1))
+    assert ts.obs.shape == (84, 84)
+    # moving cart changes pixels
+    assert not np.allclose(np.asarray(obs), np.asarray(ts.obs))
