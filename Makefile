@@ -1,0 +1,26 @@
+# Developer entry points. Everything runs from the repo root with src/ on
+# PYTHONPATH (no package install).
+
+PY := PYTHONPATH=src python
+
+.PHONY: test bench-smoke bench docs docs-check
+
+test:
+	$(PY) -m pytest -x -q
+
+# Fast end-to-end benchmark smoke: pool scaling sweep + HLO device-residency
+# check (the fig4 acceptance gate), small step counts.
+bench-smoke:
+	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024
+
+# Full paper-figure reproduction (CSV to stdout; slow).
+bench:
+	$(PY) -m benchmarks.run
+
+# Regenerate the env gallery from the registry.
+docs:
+	$(PY) docs/gen_environments.py
+
+# CI gate: every id in repro.core.registry is documented in docs/environments.md.
+docs-check:
+	$(PY) docs/gen_environments.py --check

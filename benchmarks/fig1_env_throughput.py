@@ -1,9 +1,11 @@
 """Fig. 1 reproduction: env execution throughput, CaiRL vs interpreted Gym.
 
 Paper setup: 100 000 steps averaged over trials, console and render modes,
-four classic-control envs. Here: compiled scan rollouts (batched) vs the
-pure-Python baselines, same dynamics, same machine. Reported: steps/s both
-ways and the ratio (paper: ~5× console, ~80× render).
+four classic-control envs. Here both execution models run behind the same
+pool API (repro.pool): `EnvPool` compiles the whole batched rollout into one
+device program; `HostPool` drives the pure-Python baselines (same dynamics,
+same machine). Reported: steps/s both ways and the ratio (paper: ~5×
+console, ~80× render).
 """
 from __future__ import annotations
 
@@ -12,32 +14,29 @@ from typing import Dict
 
 import jax
 
-from repro.core import PythonRunner, make, rollout_random
-from repro.envs.baseline_python import BASELINES
+from repro.pool import EnvPool, HostPool
 
 ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
 
 
 def bench_compiled(name: str, steps: int, batch: int, render: bool, trials: int = 3) -> float:
-    env = make(name)
-    key = jax.random.PRNGKey(0)
-    jax.block_until_ready(rollout_random(env, key, steps, batch, render)[0])  # compile
+    pool = EnvPool(name, batch)
+    jax.block_until_ready(pool.rollout(steps, jax.random.PRNGKey(0), render)[0])  # compile
     best = 0.0
     for t in range(trials):
-        k = jax.random.PRNGKey(t)
         t0 = time.perf_counter()
-        jax.block_until_ready(rollout_random(env, k, steps, batch, render)[0])
+        jax.block_until_ready(pool.rollout(steps, jax.random.PRNGKey(t), render)[0])
         sps = steps * batch / (time.perf_counter() - t0)
         best = max(best, sps)
     return best
 
 
 def bench_python(name: str, steps: int, render: bool, trials: int = 2) -> float:
-    runner = PythonRunner(BASELINES[name])
+    pool = HostPool(name, num_envs=1)
     best = 0.0
     for t in range(trials):
         t0 = time.perf_counter()
-        runner.run(steps, render=render, seed=t)
+        pool.run_random(steps, seed=t, render=render)
         sps = steps / (time.perf_counter() - t0)
         best = max(best, sps)
     return best

@@ -11,14 +11,15 @@ import time
 import jax
 import numpy as np
 
-from repro.core import make, rollout_random
+from repro.core import make
+from repro.pool import EnvPool
 from repro.rl.dqn import DQNConfig, greedy_returns, train_compiled
 
 
 def run(steps: int = 12000):
     env = make("Multitask-v0")
-    # random-policy baseline return
-    rew, eps, _ = rollout_random(env, jax.random.PRNGKey(1), 2000, 16)
+    # random-policy baseline return, via the pool's compiled rollout
+    rew, eps, _ = EnvPool(env, 16).rollout(2000, jax.random.PRNGKey(1))
     random_return = float(rew.sum() / jax.numpy.maximum(eps.sum(), 1))
 
     cfg = DQNConfig(num_envs=4, exploration_steps=6000, learn_start=500,

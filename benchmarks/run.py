@@ -15,10 +15,12 @@ def _emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def main() -> None:
-    from benchmarks import fig1_env_throughput, fig2_dqn_training, fig3_multitask, table2_carbon
+    from benchmarks import (fig1_env_throughput, fig2_dqn_training, fig3_multitask,
+                            fig4_pool_scaling, table2_carbon)
 
     print("name,us_per_call,derived")
-    for mod in (fig1_env_throughput, fig2_dqn_training, fig3_multitask, table2_carbon):
+    for mod in (fig1_env_throughput, fig2_dqn_training, fig3_multitask,
+                fig4_pool_scaling, table2_carbon):
         try:
             mod.main(_emit)
         except Exception as e:  # noqa: BLE001

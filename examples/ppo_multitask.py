@@ -11,7 +11,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import make, rollout_random
+from repro.core import make
+from repro.pool import EnvPool
 from repro.rl.ppo import PPOConfig, train
 
 ap = argparse.ArgumentParser()
@@ -20,7 +21,7 @@ args = ap.parse_args()
 
 env = make("Multitask-v0")
 
-rew, eps, _ = rollout_random(env, jax.random.PRNGKey(1), 2000, 16)
+rew, eps, _ = EnvPool(env, 16).rollout(2000, jax.random.PRNGKey(1))
 random_return = float(rew.sum() / max(int(eps.sum()), 1))
 print(f"random policy return: {random_return:.1f}")
 

@@ -20,16 +20,22 @@ for ep in range(3):
         ret += r
     print(f"episode {ep}: {steps} steps, return {ret:.0f}, frame {obs.shape}")
 
+# ---- EnvPool: batched Gym-style stepping, state lives on device --------------
+pool = cairl.EnvPool("CartPole-v1", num_envs=256)
+obs = pool.reset(seed=0)                       # (256, 4), device-resident
+for i in range(100):
+    obs, rew, done, info = pool.step(pool.sample_actions(i))
+print(f"\nEnvPool: stepped {pool.num_envs} envs 100x; "
+      f"mean reward {float(rew.mean()):.2f}, {int(done.sum())} resets this step")
+
 # ---- the run() fast path: whole rollout as ONE device program ---------------
-env = cairl.make_functional("CartPole-v1")
 steps, batch = 2000, 256
-key = jax.random.PRNGKey(0)
-rew, episodes, _ = cairl.rollout_random(env, key, steps, batch)  # compile
+rew, episodes, _ = pool.rollout(steps, jax.random.PRNGKey(0))  # compile
 jax.block_until_ready(rew)
 t0 = time.perf_counter()
-rew, episodes, _ = cairl.rollout_random(env, jax.random.PRNGKey(1), steps, batch)
+rew, episodes, _ = pool.rollout(steps, jax.random.PRNGKey(1))
 jax.block_until_ready(rew)
 dt = time.perf_counter() - t0
-print(f"\ncompiled rollout: {steps * batch:,} env steps in {dt:.3f}s "
+print(f"compiled rollout: {steps * batch:,} env steps in {dt:.3f}s "
       f"= {steps * batch / dt:,.0f} steps/s across {batch} envs")
 print(f"episodes completed on-device: {int(episodes.sum())}")

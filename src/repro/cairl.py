@@ -8,3 +8,4 @@ from repro.core.registry import make_compat as make  # noqa: F401  (Gym drop-in)
 from repro.core.registry import make as make_functional  # noqa: F401
 from repro.core.registry import registered  # noqa: F401
 from repro.core.runner import rollout, rollout_random  # noqa: F401
+from repro.pool import EnvPool, HostPool, ShardedEnvPool, make_pool  # noqa: F401

@@ -120,27 +120,18 @@ def rollout_random_fast(
          per-env `space.sample` (B threefry streams → 1);
       3. AutoReset keys derived from the step key (no per-env key carry).
     """
-    from repro.core.spaces import Box, Discrete
+    from repro.core.spaces import sample_batch
 
     venv = Vec(AutoReset(env), batch_size)
     state, obs = venv.reset(jax.random.fold_in(key, 0x5EED))
     space = env.action_space
-
-    def sample_actions(k):
-        if isinstance(space, Discrete):
-            return jax.random.randint(k, (batch_size,), 0, space.n, dtype=space.dtype)
-        if isinstance(space, Box):
-            low, high = space._bounds()
-            u = jax.random.uniform(k, (batch_size,) + space.shape, space.dtype)
-            return low + u * (high - low)
-        return venv.sample_actions(k)
 
     frame0 = venv.render(state) if render else jnp.zeros((batch_size,), jnp.float32)
 
     def step_fn(carry, i):
         state, rew, eps, frame = carry
         k = jax.random.fold_in(key, i)
-        action = sample_actions(k)
+        action = sample_batch(space, k, batch_size)
         ts = venv.step(state, action, k)
         frame = venv.render(ts.state) if render else frame
         return (ts.state, rew + ts.reward, eps + ts.done.astype(jnp.int32), frame), None

@@ -98,6 +98,23 @@ class MultiDiscrete(Space):
         return jnp.all((x >= 0) & (x < nv))
 
 
+def sample_batch(space: Space, key: jax.Array, batch_size: int) -> jax.Array:
+    """Sample a whole batch from ONE key (1 threefry stream, not B).
+
+    The hot-path sampler shared by runner.rollout_random_fast and
+    pool.EnvPool: Discrete/Box draw the batch in a single primitive; exotic
+    spaces fall back to a vmapped per-env `space.sample`.
+    """
+    if isinstance(space, Discrete):
+        return jax.random.randint(key, (batch_size,), 0, space.n, dtype=space.dtype)
+    if isinstance(space, Box):
+        low, high = space._bounds()
+        u = jax.random.uniform(key, (batch_size,) + space.shape, space.dtype)
+        return low + u * (high - low)
+    keys = jax.random.split(key, batch_size)
+    return jax.vmap(space.sample)(keys)
+
+
 def flatten_space(space: Space) -> Box:
     """The Flatten wrapper's target space (paper §III-A.4)."""
     if isinstance(space, Box):

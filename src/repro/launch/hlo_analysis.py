@@ -173,6 +173,29 @@ class Analysis(dict):
         return self["collectives"]["total"]
 
 
+_HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "send-done", "recv",
+                      "recv-done")
+
+
+def host_transfer_ops(hlo_text: str) -> List[str]:
+    """Instructions that move data across the host boundary.
+
+    Used to certify device-residency claims (fig4, test_pool): a compiled
+    rollout whose step loop round-trips to the host shows up here as
+    infeed/outfeed/send/recv, or as a custom-call into a Python callback
+    (io_callback / pure_callback lower to `*_callback` custom-call targets).
+    Returns "computation/instruction:opcode" strings; empty = fully resident.
+    """
+    found = []
+    for comp, instrs in parse_computations(hlo_text).items():
+        for ins in instrs:
+            if ins.opcode in _HOST_TRANSFER_OPS:
+                found.append(f"{comp}/{ins.name}:{ins.opcode}")
+            elif ins.opcode == "custom-call" and "callback" in ins.rhs:
+                found.append(f"{comp}/{ins.name}:custom-call(callback)")
+    return found
+
+
 def analyze_hlo(hlo_text: str, entry: Optional[str] = None) -> Analysis:
     comps = parse_computations(hlo_text)
     if not comps:

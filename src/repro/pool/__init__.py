@@ -1,0 +1,42 @@
+"""repro.pool — batched environment execution engines (EnvPool-style).
+
+The canonical way to run every env in the repo:
+
+  - `EnvPool`        : XLA-resident batched pool, Gym-style reset/step plus
+                       a pure `xla()` API for in-graph use (docs/pool.md).
+  - `ShardedEnvPool` : same API, batch sharded over a device mesh.
+  - `HostPool`       : same API over interpreted host envs (the paper's
+                       foreign-runtime stand-ins), threaded + double-buffered.
+  - `make_pool`      : registry-id factory over all three backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.spaces import sample_batch
+from repro.pool.envpool import EnvPool, PoolState, PoolStep, XlaPool
+from repro.pool.host import HostPool
+from repro.pool.sharded import ShardedEnvPool, default_pool_mesh
+
+
+def make_pool(name: str, num_envs: int, backend: str = "xla",
+              mesh=None, **env_kwargs):
+    """Build a pool for a registered env id.
+
+    backend: "xla" (EnvPool) | "sharded" (ShardedEnvPool) | "host" (HostPool,
+    interpreted baseline_python port — only ids with a baseline).
+    """
+    if backend == "xla":
+        return EnvPool(name, num_envs, **env_kwargs)
+    if backend == "sharded":
+        return ShardedEnvPool(name, num_envs, mesh=mesh, **env_kwargs)
+    if backend == "host":
+        return HostPool(name, num_envs)
+    raise ValueError(f"unknown pool backend {backend!r}; "
+                     "expected 'xla', 'sharded' or 'host'")
+
+
+__all__ = [
+    "EnvPool", "ShardedEnvPool", "HostPool", "PoolState", "PoolStep",
+    "XlaPool", "sample_batch", "default_pool_mesh", "make_pool",
+]

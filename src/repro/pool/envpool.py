@@ -1,0 +1,185 @@
+"""EnvPool-style batched environment execution engine.
+
+EnvPool (Weng et al., 2022) showed that the multiplier after eliminating
+interpreter overhead (the CaiRL claim) is a *pooled*, batched execution
+engine behind one vectorized API. Here the pool is XLA-resident: the
+batched env state is a device pytree that never crosses the host boundary,
+`step` is a single compiled program with the previous state's buffers
+donated, and the whole pool can be lowered *into* a training program via
+`xla()` (the analogue of EnvPool's XLA API) so rollout collection and
+learning fuse into one device program.
+
+Two surfaces:
+
+  - Gym-style stateful:  `obs = pool.reset(seed)`,
+                         `obs, rew, done, info = pool.step(actions)`.
+    State lives on device between calls; the step is jit-compiled with
+    `donate_argnums` so XLA reuses the previous state's buffers in place.
+
+  - XLA-resident pure:   `h = pool.xla()`, `carry = h.init(key)`,
+                         `carry, out = h.step(carry, actions[, key])`.
+    Pure functions of an explicit carry — scannable, vmappable, and the
+    canonical batching layer the RL algorithms (rl/dqn.py, rl/ppo.py)
+    are built on. Passing an explicit per-step `key` gives callers full
+    control of the RNG stream (the carry key is used when omitted).
+
+`EnvPool` is backed by `Vec(AutoReset(env))`: autoreset re-enters `reset`
+inside the program on `done` (pre-reset obs surfaced as
+`info["terminal_obs"]`), and `Vec` vmaps the whole stack across the batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.registry import make as registry_make
+from repro.core.spaces import sample_batch
+from repro.core.wrappers import AutoReset, Vec
+
+
+class PoolState(NamedTuple):
+    """XLA-resident pool carry. Everything stays on device across steps."""
+
+    env_state: Any          # Vec(AutoReset(env)) state pytree, leading dim B
+    obs: jax.Array          # (B, ...) current observation
+    key: jax.Array          # fallback RNG stream for key-less stepping
+
+
+class PoolStep(NamedTuple):
+    """One batched transition (post-autoreset obs; terminal obs in info)."""
+
+    obs: jax.Array          # (B, ...)
+    reward: jax.Array       # (B,)
+    done: jax.Array         # (B,)
+    info: Dict[str, jax.Array]
+
+
+class XlaPool(NamedTuple):
+    """Pure-function handle for in-graph use (EnvPool's XLA API analogue)."""
+
+    init: Callable[[jax.Array], PoolState]
+    step: Callable[..., Tuple[PoolState, PoolStep]]
+
+
+class EnvPool:
+    """Batched pool of one env type: `Vec(AutoReset(env), num_envs)` + jit.
+
+    >>> pool = EnvPool("CartPole-v1", num_envs=256)
+    >>> obs = pool.reset(seed=0)                  # (256, 4) on device
+    >>> obs, rew, done, info = pool.step(actions) # one compiled dispatch
+    """
+
+    def __init__(self, env: Union[Env, str], num_envs: int, **env_kwargs):
+        if isinstance(env, str):
+            env = registry_make(env, **env_kwargs)
+        self.env = env
+        self.num_envs = int(num_envs)
+        self.venv = Vec(AutoReset(env), self.num_envs)
+        self._carry: Optional[Tuple[Any, jax.Array]] = None  # (env_state, key)
+        self._obs: Optional[jax.Array] = None
+        # Stateful fast path: donate (env_state, key) so XLA writes the new
+        # state into the old state's buffers. obs/reward/done outputs are NOT
+        # part of the donated carry, so they stay valid across later steps.
+        self._jit_reset = jax.jit(self._stateful_reset)
+        self._jit_step = jax.jit(self._stateful_step, donate_argnums=(0,))
+        self._rollout_cache: Dict[Tuple[int, bool], Callable] = {}
+
+    # -- spaces / metadata ---------------------------------------------------
+    @property
+    def observation_space(self):
+        return self.env.observation_space
+
+    @property
+    def action_space(self):
+        return self.env.action_space
+
+    def __len__(self) -> int:
+        return self.num_envs
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}({self.env.name}, num_envs={self.num_envs})"
+
+    # -- XLA-resident pure API ----------------------------------------------
+    def _xla_init(self, key: jax.Array) -> PoolState:
+        state, obs = self.venv.reset(key)
+        return PoolState(state, obs, jax.random.fold_in(key, 0x57EB))
+
+    def _xla_step(self, carry: PoolState, actions: jax.Array,
+                  key: Optional[jax.Array] = None) -> Tuple[PoolState, PoolStep]:
+        if key is None:
+            next_key, key = jax.random.split(carry.key)
+        else:
+            next_key = carry.key
+        ts = self.venv.step(carry.env_state, actions, key)
+        return (PoolState(ts.state, ts.obs, next_key),
+                PoolStep(ts.obs, ts.reward, ts.done, ts.info))
+
+    def xla(self) -> XlaPool:
+        """Pure `(init, step)` for building the pool into larger programs."""
+        return XlaPool(self._xla_init, self._xla_step)
+
+    # -- Gym-style stateful API ----------------------------------------------
+    def _stateful_reset(self, key):
+        ps = self._xla_init(key)
+        return (ps.env_state, ps.key), ps.obs
+
+    def _stateful_step(self, carry, actions):
+        env_state, key = carry
+        ps, out = self._xla_step(PoolState(env_state, None, key), actions)
+        return (ps.env_state, ps.key), out
+
+    def reset(self, seed: int = 0) -> jax.Array:
+        """(Re)initialise all envs; returns the batched observation."""
+        self._carry, self._obs = self._jit_reset(jax.random.PRNGKey(seed))
+        return self._obs
+
+    def step(self, actions) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+        """Step every env once. Autoreset on done; state never leaves device."""
+        if self._carry is None:
+            raise RuntimeError("call reset() before step()")
+        self._carry, out = self._jit_step(self._carry, jnp.asarray(actions))
+        self._obs = out.obs
+        return out.obs, out.reward, out.done, out.info
+
+    def sample_actions(self, seed: int = 0) -> jax.Array:
+        return sample_batch(self.action_space, jax.random.PRNGKey(seed),
+                            self.num_envs)
+
+    # -- compiled whole-rollout fast path -------------------------------------
+    def rollout(self, num_steps: int, key: jax.Array, render: bool = False):
+        """Random-policy rollout as ONE device program (Listing 1/2 loop).
+
+        Returns (sum_reward (B,), episodes (B,), last_frame or zeros) —
+        bit-identical to runner.rollout_random_fast for the unsharded pool.
+        """
+        fn = self._rollout_cache.get((num_steps, render))
+        if fn is None:
+            fn = jax.jit(lambda k: self._rollout(k, num_steps, render))
+            self._rollout_cache[(num_steps, render)] = fn
+        return fn(key)
+
+    def rollout_lowered(self, num_steps: int, render: bool = False):
+        """Lower (don't run) the rollout — for HLO inspection (fig4)."""
+        return jax.jit(lambda k: self._rollout(k, num_steps, render)).lower(
+            jax.random.PRNGKey(0))
+
+    def _rollout(self, key: jax.Array, num_steps: int, render: bool):
+        carry0 = self._xla_init(jax.random.fold_in(key, 0x5EED))
+        frame0 = (self.venv.render(carry0.env_state) if render
+                  else jnp.zeros((self.num_envs,), jnp.float32))
+
+        def body(carry, i):
+            ps, rew, eps, frame = carry
+            k = jax.random.fold_in(key, i)
+            actions = sample_batch(self.action_space, k, self.num_envs)
+            ps, out = self._xla_step(ps, actions, k)
+            frame = self.venv.render(ps.env_state) if render else frame
+            return (ps, rew + out.reward, eps + out.done.astype(jnp.int32), frame), None
+
+        init = (carry0, jnp.zeros((self.num_envs,), jnp.float32),
+                jnp.zeros((self.num_envs,), jnp.int32), frame0)
+        (_, rew, eps, frame), _ = jax.lax.scan(body, init, jnp.arange(1, num_steps + 1))
+        return rew, eps, frame

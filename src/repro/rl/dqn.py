@@ -1,8 +1,9 @@
 """DQN — the paper's evaluation algorithm (§V-B/§V-C, hyperparams Table I).
 
 Two execution modes, matching the paper's comparison axis:
-  - `train_compiled`: everything (env stepping, replay, learning) inside one
-    `lax.scan` device program — the CaiRL execution model.
+  - `train_compiled`: everything (env stepping via the XLA-resident EnvPool,
+    replay, learning) inside one `lax.scan` device program — the CaiRL
+    execution model.
   - `train_host`: identical learner, but the environment is an interpreted
     host object stepped one transition at a time — the AI-Gym execution
     model. Fig. 2 compares the wall-clock of the two.
@@ -10,6 +11,7 @@ Two execution modes, matching the paper's comparison axis:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
@@ -18,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.env import Env
-from repro.core.wrappers import AutoReset, Vec
+from repro.pool import EnvPool, PoolState
 from repro.rl.networks import cnn_apply, cnn_init, mlp_apply, mlp_init
 from repro.rl.replay import ReplayState, replay_add_batch, replay_init, replay_sample
 from repro.train.optim import Adam, AdamState, huber_loss, linear_schedule
@@ -48,8 +50,7 @@ class DQNState(NamedTuple):
     target: Any
     opt: AdamState
     replay: ReplayState
-    env_state: Any
-    obs: jax.Array
+    pool: PoolState          # XLA-resident env pool carry (state + obs)
     key: jax.Array
     step: jax.Array
     ep_return: jax.Array     # (B,) running episodic return
@@ -72,13 +73,12 @@ def _build_net(env: Env, cfg: DQNConfig, key):
 def dqn_init(env: Env, cfg: DQNConfig, key: jax.Array) -> Tuple[DQNState, Callable]:
     key, knet, kenv = jax.random.split(key, 3)
     params, apply_fn = _build_net(env, cfg, knet)
-    venv = Vec(AutoReset(env), cfg.num_envs)
-    env_state, obs = venv.reset(kenv)
+    pool = EnvPool(env, cfg.num_envs).xla()
     opt = Adam(lr=cfg.lr).init(params)
     replay = replay_init(cfg.memory_size, env.observation_space.shape)
     state = DQNState(
         params=params, target=jax.tree.map(jnp.copy, params), opt=opt, replay=replay,
-        env_state=env_state, obs=obs, key=key, step=jnp.asarray(0, jnp.int32),
+        pool=pool.init(kenv), key=key, step=jnp.asarray(0, jnp.int32),
         ep_return=jnp.zeros((cfg.num_envs,), jnp.float32),
         last_return=jnp.zeros((cfg.num_envs,), jnp.float32),
     )
@@ -114,21 +114,22 @@ def make_learn_step(apply_fn, cfg: DQNConfig):
 
 def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
     """One environment-interaction + learn step; scanned by train_compiled."""
-    venv = Vec(AutoReset(env), cfg.num_envs)
+    pool = EnvPool(env, cfg.num_envs).xla()
     learn = make_learn_step(apply_fn, cfg)
 
     def step_fn(state: DQNState, _):
         key, k_eps, k_act, k_env, k_sample = jax.random.split(state.key, 5)
         eps = _epsilon(cfg, state.step)
-        q = apply_fn(state.params, state.obs)
+        obs = state.pool.obs
+        q = apply_fn(state.params, obs)
         greedy = jnp.argmax(q, axis=-1).astype(jnp.int32)
         randa = jax.random.randint(k_act, (cfg.num_envs,), 0, env.action_space.n)
         explore = jax.random.uniform(k_eps, (cfg.num_envs,)) < eps
         action = jnp.where(explore, randa, greedy)
 
-        ts = venv.step(state.env_state, action, k_env)
+        new_pool, ts = pool.step(state.pool, action, k_env)
         terminal_obs = ts.info.get("terminal_obs", ts.obs)
-        replay = replay_add_batch(state.replay, state.obs, action, ts.reward, terminal_obs, ts.done)
+        replay = replay_add_batch(state.replay, obs, action, ts.reward, terminal_obs, ts.done)
 
         # learn (skipped while the buffer warms up)
         batch = replay_sample(replay, k_sample, cfg.batch_size)
@@ -145,7 +146,7 @@ def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
         last_return = jnp.where(ts.done, ep_return, state.last_return)
         ep_return = jnp.where(ts.done, 0.0, ep_return)
 
-        new_state = DQNState(params, target, opt, replay, ts.state, ts.obs, key,
+        new_state = DQNState(params, target, opt, replay, new_pool, key,
                              state.step + 1, ep_return, last_return)
         metrics = {"loss": loss, "eps": eps, "return": jnp.mean(last_return)}
         return new_state, metrics
@@ -158,16 +159,19 @@ def train_compiled(env: Env, cfg: DQNConfig, steps: int, key: jax.Array,
     """Full DQN training as compiled scan(s). Returns (state, metrics dict of (T,))."""
     state, apply_fn = dqn_init(env, cfg, key)
     step_fn = make_train_step(env, apply_fn, cfg)
-    chunk = chunk or steps
+    chunk = min(chunk or steps, steps)
 
-    @jax.jit
-    def run_chunk(state):
-        return jax.lax.scan(step_fn, state, None, length=chunk)
+    @functools.partial(jax.jit, static_argnums=(1,))
+    def run_chunk(state, n):
+        return jax.lax.scan(step_fn, state, None, length=n)
 
     all_metrics = []
-    for _ in range(steps // chunk):
-        state, metrics = run_chunk(state)
+    done = 0
+    while done < steps:  # full chunks + one remainder chunk — exactly `steps`
+        n = min(chunk, steps - done)
+        state, metrics = run_chunk(state, n)
         all_metrics.append(metrics)
+        done += n
     metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs), *all_metrics)
     return state, apply_fn, metrics
 
@@ -218,26 +222,26 @@ def train_host(make_env_host, env_spec_env: Env, cfg: DQNConfig, steps: int, key
 
 def greedy_returns(env: Env, apply_fn, params, key: jax.Array, episodes: int = 8,
                    max_steps: int = 500) -> jax.Array:
-    """Greedy evaluation over a batch of episodes (compiled)."""
-    venv = Vec(AutoReset(env), episodes)
+    """Greedy evaluation over a batch of episodes (compiled, via the pool)."""
+    pool = EnvPool(env, episodes).xla()
 
     @jax.jit
     def run(key):
         key, rkey = jax.random.split(key)
-        state, obs = venv.reset(rkey)
+        ps = pool.init(rkey)
         finished = jnp.zeros((episodes,), bool)
         rets = jnp.zeros((episodes,), jnp.float32)
 
         def body(carry, _):
-            state, obs, key, finished, rets = carry
+            ps, key, finished, rets = carry
             key, skey = jax.random.split(key)
-            action = jnp.argmax(apply_fn(params, obs), axis=-1).astype(jnp.int32)
-            ts = venv.step(state, action, skey)
+            action = jnp.argmax(apply_fn(params, ps.obs), axis=-1).astype(jnp.int32)
+            ps, ts = pool.step(ps, action, skey)
             rets = rets + ts.reward * (~finished)
             finished = finished | ts.done
-            return (ts.state, ts.obs, key, finished, rets), None
+            return (ps, key, finished, rets), None
 
-        (_, _, _, _, rets), _ = jax.lax.scan(body, (state, obs, key, finished, rets), None, length=max_steps)
+        (_, _, _, rets), _ = jax.lax.scan(body, (ps, key, finished, rets), None, length=max_steps)
         return rets
 
     return run(key)

@@ -1,8 +1,8 @@
 """PPO on vectorised compiled envs — the policy-gradient learner of the toolkit.
 
-Rollout collection uses the paper-style `run()` fast path (lax.scan over the
-vectorised env), so experience generation is a single device program; the
-update (GAE + clipped surrogate, K epochs of minibatches) is a second one.
+Rollout collection scans the XLA-resident EnvPool (repro.pool), so experience
+generation is a single device program; the update (GAE + clipped surrogate,
+K epochs of minibatches) is a second one.
 """
 from __future__ import annotations
 
@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.env import Env
-from repro.core.wrappers import AutoReset, Vec
+from repro.pool import EnvPool, PoolState
 from repro.rl.networks import mlp_apply, mlp_init
 from repro.train.optim import Adam, AdamState
 
@@ -61,8 +61,7 @@ def ac_apply(params: ACParams, obs, activation="tanh"):
 class PPOState(NamedTuple):
     params: ACParams
     opt: AdamState
-    env_state: Any
-    obs: jax.Array
+    pool: PoolState          # XLA-resident env pool carry (state + obs)
     key: jax.Array
     ep_return: jax.Array
     last_return: jax.Array
@@ -72,11 +71,10 @@ def ppo_init(env: Env, cfg: PPOConfig, key: jax.Array) -> PPOState:
     key, knet, kenv = jax.random.split(key, 3)
     obs_dim = int(np.prod(env.observation_space.shape))
     params = ac_init(knet, obs_dim, env.action_space.n, cfg)
-    venv = Vec(AutoReset(env), cfg.num_envs)
-    env_state, obs = venv.reset(kenv)
+    pool = EnvPool(env, cfg.num_envs).xla()
     opt = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm).init(params)
     zeros = jnp.zeros((cfg.num_envs,), jnp.float32)
-    return PPOState(params, opt, env_state, obs, key, zeros, zeros)
+    return PPOState(params, opt, pool.init(kenv), key, zeros, zeros)
 
 
 def _gae(rewards, values, dones, last_value, discount, lam):
@@ -95,28 +93,29 @@ def _gae(rewards, values, dones, last_value, discount, lam):
 
 
 def make_update(env: Env, cfg: PPOConfig):
-    venv = Vec(AutoReset(env), cfg.num_envs)
+    pool = EnvPool(env, cfg.num_envs).xla()
     optimizer = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm)
 
     def collect(state: PPOState):
         def step_fn(carry, _):
-            env_state, obs, key, ep_ret, last_ret = carry
+            ps, key, ep_ret, last_ret = carry
             key, k_act, k_env = jax.random.split(key, 3)
+            obs = ps.obs
             logits, value = ac_apply(state.params, obs, cfg.activation)
             action = jax.random.categorical(k_act, logits)
             logp = jax.nn.log_softmax(logits)[jnp.arange(cfg.num_envs), action]
-            ts = venv.step(env_state, action.astype(jnp.int32), k_env)
+            ps, ts = pool.step(ps, action.astype(jnp.int32), k_env)
             ep_ret = ep_ret + ts.reward
             last_ret = jnp.where(ts.done, ep_ret, last_ret)
             ep_ret = jnp.where(ts.done, 0.0, ep_ret)
             out = (obs, action, logp, value, ts.reward, ts.done)
-            return (ts.state, ts.obs, key, ep_ret, last_ret), out
+            return (ps, key, ep_ret, last_ret), out
 
-        carry = (state.env_state, state.obs, state.key, state.ep_return, state.last_return)
-        (env_state, obs, key, ep_ret, last_ret), traj = jax.lax.scan(
+        carry = (state.pool, state.key, state.ep_return, state.last_return)
+        (ps, key, ep_ret, last_ret), traj = jax.lax.scan(
             step_fn, carry, None, length=cfg.rollout_len
         )
-        return (env_state, obs, key, ep_ret, last_ret), traj
+        return (ps, key, ep_ret, last_ret), traj
 
     def loss_fn(params, batch):
         obs, action, logp_old, adv, ret = batch
@@ -133,9 +132,9 @@ def make_update(env: Env, cfg: PPOConfig):
 
     @jax.jit
     def update(state: PPOState):
-        (env_state, obs, key, ep_ret, last_ret), traj = collect(state)
+        (ps, key, ep_ret, last_ret), traj = collect(state)
         t_obs, t_act, t_logp, t_val, t_rew, t_done = traj
-        _, last_value = ac_apply(state.params, obs, cfg.activation)
+        _, last_value = ac_apply(state.params, ps.obs, cfg.activation)
         adv = _gae(t_rew, t_val, t_done.astype(jnp.float32), last_value, cfg.discount, cfg.gae_lambda)
         ret = adv + t_val
         adv = (adv - adv.mean()) / (adv.std() + 1e-8)
@@ -164,7 +163,7 @@ def make_update(env: Env, cfg: PPOConfig):
         (params, opt, key), losses = jax.lax.scan(
             epoch, (state.params, state.opt, key), None, length=cfg.epochs
         )
-        new_state = PPOState(params, opt, env_state, obs, key, ep_ret, last_ret)
+        new_state = PPOState(params, opt, ps, key, ep_ret, last_ret)
         return new_state, {"loss": losses.mean(), "return": last_ret.mean()}
 
     return update

@@ -16,7 +16,8 @@ def test_matmul_flops_exact():
                  jax.ShapeDtypeStruct((m, k), jnp.float32),
                  jax.ShapeDtypeStruct((k, n), jnp.float32))
     a = analyze_hlo(c.as_text())
-    ref = dict(c.cost_analysis())["flops"]
+    ca = c.cost_analysis()  # dict in new jax, [dict] (one per device) in older
+    ref = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
     np.testing.assert_allclose(a.flops, ref, rtol=0.01)
     np.testing.assert_allclose(a.flops, 2 * m * k * n, rtol=0.01)
 

@@ -1,5 +1,7 @@
 """Hypothesis property tests over the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 import jax
