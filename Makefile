@@ -3,15 +3,22 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-smoke bench docs docs-check
+.PHONY: test bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
 # Fast end-to-end benchmark smoke: pool scaling sweep + HLO device-residency
-# check (the fig4 acceptance gate), small step counts.
-bench-smoke:
-	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024
+# check (the fig4 acceptance gate), small step counts — and the JSON perf
+# record so the trajectory across PRs is captured.
+bench-smoke: bench-json
+
+# Machine-readable perf record: fig1 (steps/s per backend, vmap vs fused
+# pallas megastep) and fig4 (batch/device scaling) in smoke mode.
+bench-json:
+	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
+	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024 \
+		--json BENCH_fig4.json
 
 # Full paper-figure reproduction (CSV to stdout; slow).
 bench:

@@ -9,18 +9,22 @@ console, ~80× render).
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict
 
 import jax
 
+from repro.launch.hlo_analysis import host_transfer_ops
 from repro.pool import EnvPool, HostPool
 
 ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
 
 
-def bench_compiled(name: str, steps: int, batch: int, render: bool, trials: int = 3) -> float:
-    pool = EnvPool(name, batch)
+def bench_compiled(name: str, steps: int, batch: int, render: bool,
+                   trials: int = 3, backend: str = "vmap",
+                   unroll: int = 32) -> float:
+    pool = EnvPool(name, batch, backend=backend, unroll=unroll)
     jax.block_until_ready(pool.rollout(steps, jax.random.PRNGKey(0), render)[0])  # compile
     best = 0.0
     for t in range(trials):
@@ -60,6 +64,34 @@ def run(console_steps: int = 2000, render_steps: int = 200, batch: int = 64) -> 
     return rows
 
 
+def run_backends(steps: int = 2000, batch: int = 64, unroll: int = 32,
+                 include_host: bool = True, envs=None,
+                 backends=("vmap", "pallas")) -> Dict:
+    """Per-backend console throughput: vmap pool vs fused pallas megastep.
+
+    The pallas pool's compiled rollout is also HLO-checked for host
+    transfers (must be 0 — device residency survives the fused path).
+    """
+    rows: Dict[str, Dict] = {}
+    for name in (envs or ENVS):
+        r: Dict = {}
+        if "vmap" in backends:
+            r["vmap_sps"] = bench_compiled(name, steps, batch, render=False)
+        if "pallas" in backends:
+            pool = EnvPool(name, batch, backend="pallas", unroll=unroll)
+            transfers = host_transfer_ops(
+                pool.rollout_lowered(min(steps, 256)).compile().as_text())
+            r["host_transfers"] = len(transfers)
+            r["pallas_sps"] = bench_compiled(name, steps, batch, render=False,
+                                             backend="pallas", unroll=unroll)
+        if "vmap_sps" in r and "pallas_sps" in r:
+            r["pallas_vs_vmap"] = r["pallas_sps"] / r["vmap_sps"]
+        if include_host:
+            r["gym_sps"] = bench_python(name, min(steps, 2000), render=False)
+        rows[name] = r
+    return rows
+
+
 def main(emit):
     rows = run()
     for name, r in rows.items():
@@ -67,3 +99,47 @@ def main(emit):
              f"speedup={r['console_speedup']:.1f}x (cairl {r['cairl_console_sps']:.0f} vs gym {r['gym_console_sps']:.0f} steps/s)")
         emit(f"fig1/{name}/render", 1e6 / r["cairl_render_sps"],
              f"speedup={r['render_speedup']:.1f}x (cairl {r['cairl_render_sps']:.0f} vs gym {r['gym_render_sps']:.0f} steps/s)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="both",
+                    choices=["vmap", "pallas", "both"],
+                    help="pool step engine(s) to benchmark")
+    ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--unroll", type=int, default=32,
+                    help="env steps fused per megastep kernel launch")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write steps/sec per backend as JSON (bench-json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small step counts for CI smoke / perf trajectory")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 300)
+
+    # --backend pallas still measures vmap: the deliverable is the ratio.
+    backends = ("vmap",) if args.backend == "vmap" else ("vmap", "pallas")
+    print(f"devices: {len(jax.devices())} ({jax.default_backend()})  "
+          f"steps={args.steps} batch={args.batch} unroll={args.unroll}")
+    rows = run_backends(args.steps, args.batch, args.unroll,
+                        include_host=not args.smoke, backends=backends)
+    for name, r in rows.items():
+        line = f"{name:>16}: vmap {r['vmap_sps']:>12,.0f} steps/s"
+        if "pallas_sps" in r:
+            resident = ("device-resident" if r["host_transfers"] == 0
+                        else f"HOST TRANSFERS: {r['host_transfers']}")
+            line += (f" | pallas {r['pallas_sps']:>12,.0f} steps/s "
+                     f"({r['pallas_vs_vmap']:.2f}x) [{resident}]")
+        if "gym_sps" in r:
+            line += f" | gym {r['gym_sps']:,.0f}"
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"steps": args.steps, "batch": args.batch,
+                       "unroll": args.unroll,
+                       "backend_filter": args.backend, "envs": rows}, f,
+                      indent=2)
+        print(f"wrote {args.json}")

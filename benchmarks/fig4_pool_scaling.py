@@ -53,7 +53,7 @@ def check_device_resident(pool, steps: int = 64) -> List[str]:
 
 
 def run(env_name: str = "CartPole-v1", steps: int = 2000,
-        batches=(1, 64, 1024)) -> Dict:
+        batches=(1, 64, 1024), unroll: int = 32) -> Dict:
     rows: Dict[str, Dict] = {}
     for batch in batches:
         pool = EnvPool(env_name, batch)
@@ -63,6 +63,22 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
             "host_transfers": len(transfers),
             "transfer_ops": transfers,
         }
+    # Fused megastep engine over the same batch axis (kernels/envstep):
+    # one kernel launch per `unroll` steps instead of a scanned vmap step.
+    # Envs without a fused spec (e.g. Multitask) just skip these rows.
+    from repro.core.env import supports_fused_step
+    from repro.core.registry import make
+
+    if supports_fused_step(make(env_name)):
+        for batch in batches:
+            pool = EnvPool(env_name, batch, backend="pallas", unroll=unroll)
+            transfers = check_device_resident(pool)
+            rows[f"pallas_batch{batch}"] = {
+                "steps_per_s": bench_pool(pool, steps),
+                "host_transfers": len(transfers),
+                "transfer_ops": transfers,
+                "unroll": unroll,
+            }
 
     n_dev = len(jax.devices())
     dev_counts = sorted({1, n_dev} | ({2} if n_dev >= 2 else set()))
@@ -89,16 +105,27 @@ def main(emit):
 
 if __name__ == "__main__":
     import argparse
+    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--env", default="CartPole-v1")
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--batches", default="1,64,1024")
+    ap.add_argument("--unroll", type=int, default=32,
+                    help="env steps fused per megastep launch (pallas rows)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write steps/sec per config as JSON (bench-json)")
     args = ap.parse_args()
     batches = tuple(int(b) for b in args.batches.split(","))
 
     print(f"devices: {len(jax.devices())} ({jax.default_backend()})")
-    for name, r in run(args.env, args.steps, batches).items():
+    rows = run(args.env, args.steps, batches, unroll=args.unroll)
+    for name, r in rows.items():
         resident = "device-resident" if r["host_transfers"] == 0 else \
             f"HOST TRANSFERS: {r['transfer_ops']}"
-        print(f"{name:>12}: {r['steps_per_s']:>12,.0f} steps/s  [{resident}]")
+        print(f"{name:>16}: {r['steps_per_s']:>12,.0f} steps/s  [{resident}]")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"env": args.env, "steps": args.steps,
+                       "unroll": args.unroll, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")

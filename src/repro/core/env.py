@@ -49,6 +49,32 @@ class Env:
     def render(self, state: Any) -> jax.Array:
         raise NotImplementedError(f"{type(self).__name__} has no renderer")
 
+    # -- optional fused fast path --------------------------------------------
+    def fused_step(self, state: Any, actions: jax.Array,
+                   keys: jax.Array = None, num_steps: int = None, *,
+                   backend: str = "auto", batch_block: int = 128):
+        """Optional protocol hook: advance a *batched autoreset* state by
+        `num_steps` fused env steps in one kernel launch.
+
+        `state` is the env_state `Vec(AutoReset(self))` carries (batched
+        (B, ...) leaves); `actions` is a (num_steps, B[, A]) block; `keys`
+        is an optional per-step key array (ignored by action-deterministic
+        envs). Returns `(new_state, Timestep)` with a leading step axis on
+        the Timestep leaves — the stack `lax.scan` of the vmap step would
+        produce, bit-compatible with it.
+
+        The default implementation delegates to the Pallas megastep
+        subsystem (repro.kernels.envstep) when this env has a registered
+        fused spec and raises NotImplementedError otherwise; subclasses
+        with bespoke fused kernels may override directly. Use
+        `supports_fused_step(env)` to probe before calling.
+        """
+        from repro.kernels.envstep import fused_step as _fused_step
+
+        return _fused_step(self, state, actions, keys=keys,
+                           num_steps=num_steps, backend=backend,
+                           batch_block=batch_block)
+
     # -- metadata ------------------------------------------------------------
     @property
     def name(self) -> str:
@@ -60,6 +86,16 @@ class Env:
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}()"
+
+
+def supports_fused_step(env: Env) -> bool:
+    """True if `env.fused_step` will run (overridden, or a megastep spec
+    exists for the stack — see repro.kernels.envstep)."""
+    if type(env).fused_step is not Env.fused_step:
+        return True
+    from repro.kernels.envstep import supports
+
+    return supports(env)
 
 
 def zeros_info() -> Dict[str, jax.Array]:

@@ -21,6 +21,7 @@ def register(name: str, factory: Callable[..., Env]) -> None:
 
 
 def registered() -> list:
+    _ensure_builtins()  # so `cairl.registered()` is complete before any make()
     return sorted(_REGISTRY)
 
 

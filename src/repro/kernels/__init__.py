@@ -2,6 +2,7 @@
 
 - raster/    : the paper's SIMD software renderer, TPU-native (VMEM framebuffers)
 - attention/ : flash GQA attention for the learner plane (train/prefill)
+- envstep/   : fused multi-step environment kernels (megastep) behind the pool
 
 Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with backend dispatch) and ref.py (pure-jnp oracle used by tests).

@@ -1,0 +1,134 @@
+"""Public megastep API: backend dispatch + the wrapper-stack adapter.
+
+`env_megastep` is the raw row-level op (pallas | pallas_interpret | jnp, with
+"auto" picking Pallas on TPU and the jnp reference elsewhere — the same
+dispatch idiom as kernels/raster and kernels/attention).
+
+`fused_step` is the high-level entry the pool and `Env.fused_step` use: it
+takes the *batched autoreset state* exactly as `Vec(AutoReset(env))` carries
+it, precomputes the auto-reset key chain and fresh reset states with the
+identical `jax.random` call sequence `AutoReset.step` makes per step (so the
+threefry stream is bit-exact against the vmap path), flattens the state to
+rows, launches the kernel, and rebuilds the state pytree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.envstep.megastep import megastep_pallas
+from repro.kernels.envstep.ref import megastep_ref
+from repro.kernels.envstep.specs import lookup
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def env_megastep(step_rows, state, actions, fresh, fresh_obs, *,
+                 max_steps: Optional[int] = None, backend: str = "auto",
+                 batch_block: int = 128):
+    """Row-level K-step fused op with backend dispatch.
+
+    backend: "auto" (pallas on TPU, jnp elsewhere) | "pallas" |
+    "pallas_interpret" | "jnp".
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return megastep_pallas(step_rows, state, actions, fresh, fresh_obs,
+                               max_steps=max_steps, batch_block=batch_block)
+    if backend == "pallas_interpret":
+        return megastep_pallas(step_rows, state, actions, fresh, fresh_obs,
+                               max_steps=max_steps, batch_block=batch_block,
+                               interpret=True)
+    if backend == "jnp":
+        return megastep_ref(step_rows, state, actions, fresh, fresh_obs,
+                            max_steps=max_steps)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def supports(env) -> bool:
+    """True if `env` (base or TimeLimit(base)) has a fused megastep spec."""
+    return lookup(env) is not None
+
+
+def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
+               *, backend: str = "auto", batch_block: int = 128):
+    """Advance a batched `AutoReset(env)` state by `num_steps` fused steps.
+
+    env     : the single-env stack the pool holds (`TimeLimit(base)` or base).
+    state   : `AutoResetState` with batched (B, ...) leaves — exactly the
+              env_state `Vec(AutoReset(env))` carries.
+    actions : (K, B) (discrete) or (K, B, 1) (continuous) action block.
+    keys    : optional per-step key array; accepted for protocol symmetry
+              with `Vec.step` and ignored — every fused env's dynamics are
+              action-deterministic, and auto-reset randomness comes from the
+              state's own key chain (like the vmap path).
+
+    Returns `(new_state, ts)` where `ts` is a `Timestep` whose obs/reward/
+    done/info leaves carry a leading (K, ...) step axis — the same stack
+    `lax.scan` of `Vec(AutoReset(env)).step` would produce.
+    """
+    from repro.core.env import Timestep
+    from repro.core.wrappers import AutoResetState, TimeLimitState
+
+    found = lookup(env)
+    if found is None:
+        raise NotImplementedError(
+            f"no fused megastep spec for {type(env.unwrapped).__name__}; "
+            "supported: CartPole, MountainCar, Pendulum, Acrobot, LightsOut "
+            "(bare or under a single TimeLimit)")
+    spec, max_steps = found
+
+    acts = jnp.asarray(actions)
+    if acts.ndim == 3 and acts.shape[-1] == 1:
+        acts = acts[..., 0]
+    if acts.ndim != 2:
+        raise ValueError(f"actions must be (K, B[, 1]); got {actions.shape}")
+    k, b = acts.shape
+    if num_steps is not None and num_steps != k:
+        raise ValueError(f"num_steps={num_steps} != actions.shape[0]={k}")
+
+    # Auto-reset key chain + fresh reset states, OUTSIDE the kernel: the same
+    # per-step `split(state.key)` + `env.reset(reset_key)` AutoReset.step
+    # performs, so the threefry stream matches the vmap path bit-for-bit.
+    def reset_body(ks, _):
+        pair = jax.vmap(jax.random.split)(ks)          # (B, 2, 2)
+        fs, fo = jax.vmap(env.reset)(pair[:, 1])
+        return pair[:, 0], (fs, fo)
+
+    final_keys, (fresh_states, fresh_obs) = jax.lax.scan(
+        reset_body, state.key, None, length=k)
+
+    def to_rows(wrapped):
+        if max_steps is None:
+            return spec.flatten(wrapped)
+        return jnp.concatenate(
+            [spec.flatten(wrapped.inner),
+             wrapped.t.astype(jnp.float32)[..., None, :]], axis=-2)
+
+    rows = to_rows(state.inner)                        # (S', B)
+    fresh_rows = to_rows(fresh_states)                 # (K, S', B)
+    fobs_rows = jnp.swapaxes(fresh_obs, -1, -2)        # (K, O, B)
+
+    new_rows, obs, tobs, reward, done = env_megastep(
+        spec.step_rows, rows, acts.astype(jnp.float32), fresh_rows, fobs_rows,
+        max_steps=max_steps, backend=backend, batch_block=batch_block)
+
+    inner = spec.unflatten(new_rows if max_steps is None
+                           else new_rows[:spec.state_size])
+    if max_steps is not None:
+        inner = TimeLimitState(inner, new_rows[spec.state_size].astype(jnp.int32))
+    new_state = AutoResetState(inner, final_keys)
+    obs = jnp.swapaxes(obs, -1, -2)                    # (K, B, O)
+    return new_state, Timestep(
+        state=new_state, obs=obs, reward=reward,
+        done=done.astype(bool),
+        info={"terminal_obs": jnp.swapaxes(tobs, -1, -2)})

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the megastep kernel: a scan of the shared transition.
+
+Same row-major layout and the exact `fused_transition` body the Pallas
+kernel runs (megastep.py), but expressed as `lax.scan` over the K steps —
+the CPU execution path and the parity oracle for
+tests/test_envstep_fused.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.envstep.megastep import fused_transition
+
+
+def megastep_ref(step_rows: Callable, state: jax.Array, actions: jax.Array,
+                 fresh: jax.Array, fresh_obs: jax.Array, *,
+                 max_steps: Optional[int] = None):
+    """Same contract as megastep_pallas: returns
+    (new_state (S', B), obs (K, O, B), terminal_obs (K, O, B),
+    reward (K, B), done (K, B)), all f32."""
+    s_env = state.shape[0] - (1 if max_steps is not None else 0)
+
+    def body(rows, xs):
+        act, fresh_t, fobs_t = xs
+        new_rows, obs_out, tobs, reward, done = fused_transition(
+            step_rows, rows, act[None], fresh_t, fobs_t, s_env, max_steps)
+        return new_rows, (obs_out, tobs, reward[0], done[0])
+
+    new_state, (obs, tobs, rew, done) = jax.lax.scan(
+        body, state.astype(jnp.float32),
+        (actions.astype(jnp.float32), fresh.astype(jnp.float32),
+         fresh_obs.astype(jnp.float32)))
+    return new_state, obs, tobs, rew, done

@@ -1,0 +1,266 @@
+"""Per-env fused-step specs: row-major dynamics for the megastep kernel.
+
+A `FusedSpec` describes one base environment's dynamics in *row-major* form:
+the batched state is a single `(S, B)` float32 array (one row per state
+component, batch along the 128-wide lane dimension) and `step_rows` advances
+all B lanes with pure element-wise VPU ops. The same `step_rows` body runs
+inside the Pallas megastep kernel (megastep.py) and the pure-jnp reference
+(ref.py), so kernel and oracle share one dynamics implementation.
+
+Every formula here mirrors the canonical env module (envs/classic/*,
+envs/puzzle.py) operation-for-operation — parity with the vmap path is a
+test contract (tests/test_envstep_fused.py), not an aspiration. Integer
+state (LightsOut board, press counters) rides in float32 rows; the values
+are small integers, so the round-trip through f32 is exact.
+
+Registry: `lookup(env)` unwraps an optional outer TimeLimit and returns
+`(spec, max_steps)` for supported base envs, else None.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FusedSpec(NamedTuple):
+    """Row-major dynamics of one base env (state components × batch lanes)."""
+
+    name: str
+    state_size: int     # S: rows in the flattened base state
+    obs_size: int       # O: rows in the observation
+    # flatten: batched state pytree with (..., B) leaves -> (..., S, B) f32
+    flatten: Callable[[Any], jax.Array]
+    # unflatten: (S, B) f32 -> batched state pytree (inverse of flatten)
+    unflatten: Callable[[jax.Array], Any]
+    # step_rows: (rows (S, B), action (1, B) f32)
+    #   -> (new_rows (S, B), obs (O, B), reward (1, B), done (1, B) f32)
+    step_rows: Callable[[jax.Array, jax.Array], Tuple[jax.Array, ...]]
+
+
+def _row(x: jax.Array) -> jax.Array:
+    """(..., B) leaf -> (..., 1, B) row."""
+    return x[..., None, :]
+
+
+def _stack_rows(leaves) -> jax.Array:
+    """[(..., B)] leaves -> (..., S, B) rows (batch stays on the lane dim)."""
+    return jnp.stack(leaves, axis=-2).astype(jnp.float32)
+
+
+# -- CartPole ----------------------------------------------------------------
+
+def _cartpole_spec(env) -> FusedSpec:
+    from repro.envs.classic.cartpole import (
+        CartPoleState, FORCE_MAG, GRAVITY, LENGTH, MASSPOLE, POLEMASS_LENGTH,
+        TAU, THETA_THRESHOLD, TOTAL_MASS, X_THRESHOLD)
+
+    def flatten(s: CartPoleState) -> jax.Array:
+        return _stack_rows([s.x, s.x_dot, s.theta, s.theta_dot])
+
+    def unflatten(rows: jax.Array) -> CartPoleState:
+        return CartPoleState(rows[0], rows[1], rows[2], rows[3])
+
+    def step_rows(rows, act):
+        x, x_dot = rows[0:1], rows[1:2]
+        theta, theta_dot = rows[2:3], rows[3:4]
+        force = jnp.where(act == 1.0, FORCE_MAG, -FORCE_MAG)
+        costheta, sintheta = jnp.cos(theta), jnp.sin(theta)
+        temp = (force + POLEMASS_LENGTH * theta_dot**2 * sintheta) / TOTAL_MASS
+        thetaacc = (GRAVITY * sintheta - costheta * temp) / (
+            LENGTH * (4.0 / 3.0 - MASSPOLE * costheta**2 / TOTAL_MASS)
+        )
+        xacc = temp - POLEMASS_LENGTH * thetaacc * costheta / TOTAL_MASS
+        nx = x + TAU * x_dot
+        nxd = x_dot + TAU * xacc
+        nth = theta + TAU * theta_dot
+        nthd = theta_dot + TAU * thetaacc
+        new = jnp.concatenate([nx, nxd, nth, nthd], axis=0)
+        done = ((jnp.abs(nx) > X_THRESHOLD)
+                | (jnp.abs(nth) > THETA_THRESHOLD)).astype(jnp.float32)
+        return new, new, jnp.ones_like(done), done
+
+    return FusedSpec("CartPole", 4, 4, flatten, unflatten, step_rows)
+
+
+# -- MountainCar -------------------------------------------------------------
+
+def _mountain_car_spec(env) -> FusedSpec:
+    from repro.envs.classic.mountain_car import (
+        FORCE, GOAL_POS, GOAL_VEL, GRAVITY, MAX_POS, MAX_SPEED, MIN_POS,
+        MountainCarState)
+
+    def flatten(s: MountainCarState) -> jax.Array:
+        return _stack_rows([s.position, s.velocity])
+
+    def unflatten(rows: jax.Array) -> MountainCarState:
+        return MountainCarState(rows[0], rows[1])
+
+    def step_rows(rows, act):
+        pos, vel = rows[0:1], rows[1:2]
+        nv = vel + (act - 1.0) * FORCE + jnp.cos(3 * pos) * (-GRAVITY)
+        nv = jnp.clip(nv, -MAX_SPEED, MAX_SPEED)
+        npos = jnp.clip(pos + nv, MIN_POS, MAX_POS)
+        nv = jnp.where((npos <= MIN_POS) & (nv < 0), 0.0, nv)
+        new = jnp.concatenate([npos, nv], axis=0)
+        done = ((npos >= GOAL_POS) & (nv >= GOAL_VEL)).astype(jnp.float32)
+        return new, new, -jnp.ones_like(done), done
+
+    return FusedSpec("MountainCar", 2, 2, flatten, unflatten, step_rows)
+
+
+# -- Pendulum ----------------------------------------------------------------
+
+def _pendulum_spec(env) -> FusedSpec:
+    from repro.envs.classic.pendulum import (
+        DT, G, L, M, MAX_SPEED, MAX_TORQUE, PendulumState, _angle_normalize)
+
+    def flatten(s: PendulumState) -> jax.Array:
+        return _stack_rows([s.theta, s.theta_dot])
+
+    def unflatten(rows: jax.Array) -> PendulumState:
+        return PendulumState(rows[0], rows[1])
+
+    def step_rows(rows, act):
+        th, thdot = rows[0:1], rows[1:2]
+        u = jnp.clip(act, -MAX_TORQUE, MAX_TORQUE)
+        costs = _angle_normalize(th) ** 2 + 0.1 * thdot**2 + 0.001 * u**2
+        nthdot = thdot + (3 * G / (2 * L) * jnp.sin(th) + 3.0 / (M * L**2) * u) * DT
+        nthdot = jnp.clip(nthdot, -MAX_SPEED, MAX_SPEED)
+        nth = th + nthdot * DT
+        new = jnp.concatenate([nth, nthdot], axis=0)
+        obs = jnp.concatenate([jnp.cos(nth), jnp.sin(nth), nthdot], axis=0)
+        done = jnp.zeros_like(u)
+        return new, obs, -costs, done
+
+    return FusedSpec("Pendulum", 2, 3, flatten, unflatten, step_rows)
+
+
+# -- Acrobot -----------------------------------------------------------------
+
+def _acrobot_spec(env) -> FusedSpec:
+    from repro.envs.classic.acrobot import (
+        AcrobotState, DT, G, I1, I2, L1, LC1, LC2, M1, M2, MAX_VEL_1,
+        MAX_VEL_2)
+
+    def flatten(s: AcrobotState) -> jax.Array:
+        return _stack_rows([s.theta1, s.theta2, s.dtheta1, s.dtheta2])
+
+    def unflatten(rows: jax.Array) -> AcrobotState:
+        return AcrobotState(rows[0], rows[1], rows[2], rows[3])
+
+    def dsdt(s, torque):
+        theta1, theta2 = s[0:1], s[1:2]
+        dtheta1, dtheta2 = s[2:3], s[3:4]
+        d1 = (M1 * LC1**2
+              + M2 * (L1**2 + LC2**2 + 2 * L1 * LC2 * jnp.cos(theta2))
+              + I1 + I2)
+        d2 = M2 * (LC2**2 + L1 * LC2 * jnp.cos(theta2)) + I2
+        phi2 = M2 * LC2 * G * jnp.cos(theta1 + theta2 - jnp.pi / 2.0)
+        phi1 = (-M2 * L1 * LC2 * dtheta2**2 * jnp.sin(theta2)
+                - 2 * M2 * L1 * LC2 * dtheta2 * dtheta1 * jnp.sin(theta2)
+                + (M1 * LC1 + M2 * L1) * G * jnp.cos(theta1 - jnp.pi / 2)
+                + phi2)
+        ddtheta2 = (torque + d2 / d1 * phi1
+                    - M2 * L1 * LC2 * dtheta1**2 * jnp.sin(theta2) - phi2
+                    ) / (M2 * LC2**2 + I2 - d2**2 / d1)
+        ddtheta1 = -(d2 * ddtheta2 + phi1) / d1
+        return jnp.concatenate([dtheta1, dtheta2, ddtheta1, ddtheta2], axis=0)
+
+    def wrap(x, lo, hi):
+        return lo + jnp.mod(x - lo, hi - lo)
+
+    def step_rows(rows, act):
+        torque = act - 1.0  # TORQUES = [-1, 0, 1]
+        k1 = dsdt(rows, torque)
+        k2 = dsdt(rows + DT / 2 * k1, torque)
+        k3 = dsdt(rows + DT / 2 * k2, torque)
+        k4 = dsdt(rows + DT * k3, torque)
+        ns = rows + DT / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+        th1 = wrap(ns[0:1], -jnp.pi, jnp.pi)
+        th2 = wrap(ns[1:2], -jnp.pi, jnp.pi)
+        dth1 = jnp.clip(ns[2:3], -MAX_VEL_1, MAX_VEL_1)
+        dth2 = jnp.clip(ns[3:4], -MAX_VEL_2, MAX_VEL_2)
+        new = jnp.concatenate([th1, th2, dth1, dth2], axis=0)
+        done = ((-jnp.cos(th1) - jnp.cos(th2 + th1)) > 1.0).astype(jnp.float32)
+        reward = jnp.where(done > 0.0, 0.0, -1.0)
+        obs = jnp.concatenate(
+            [jnp.cos(th1), jnp.sin(th1), jnp.cos(th2), jnp.sin(th2),
+             dth1, dth2], axis=0)
+        return new, obs, reward, done
+
+    return FusedSpec("Acrobot", 4, 6, flatten, unflatten, step_rows)
+
+
+# -- LightsOut ---------------------------------------------------------------
+
+def _lightsout_spec(env) -> FusedSpec:
+    from repro.envs.puzzle import LightsOutState
+
+    n = env.n
+    m = n * n
+
+    def flatten(s: LightsOutState) -> jax.Array:
+        board = s.board.reshape(s.board.shape[:-2] + (m,))
+        rows = jnp.swapaxes(board, -1, -2).astype(jnp.float32)
+        return jnp.concatenate([rows, _row(s.t).astype(jnp.float32)], axis=-2)
+
+    def unflatten(rows: jax.Array) -> LightsOutState:
+        board = jnp.swapaxes(rows[:m], -1, -2)
+        b = board.shape[0]
+        return LightsOutState(
+            board.reshape(b, n, n).astype(jnp.int32),
+            rows[m].astype(jnp.int32))
+
+    def step_rows(rows, act):
+        board, t = rows[:m], rows[m:m + 1]
+        # Per-cell (row, col) indices as (m, 1) planes; 2-D iota is TPU-native.
+        idx = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+        ri = (idx // n).astype(jnp.float32)
+        ci = (idx % n).astype(jnp.float32)
+        r = jnp.floor(act / n)
+        c = act - r * n
+        cross = (((ri == r) & (jnp.abs(ci - c) <= 1))
+                 | ((ci == c) & (jnp.abs(ri - r) <= 1))).astype(jnp.float32)
+        nb = board + cross - 2.0 * board * cross  # XOR on {0, 1} rows
+        done = (jnp.sum(nb, axis=0, keepdims=True) == 0).astype(jnp.float32)
+        reward = jnp.where(done > 0.0, 10.0, -1.0)
+        new = jnp.concatenate([nb, t + 1.0], axis=0)
+        return new, nb, reward, done
+
+    return FusedSpec("LightsOut", m + 1, m, flatten, unflatten, step_rows)
+
+
+# -- registry ----------------------------------------------------------------
+
+def _factories():
+    from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
+    from repro.envs.puzzle import LightsOut
+
+    return {
+        CartPole: _cartpole_spec,
+        MountainCar: _mountain_car_spec,
+        Pendulum: _pendulum_spec,
+        Acrobot: _acrobot_spec,
+        LightsOut: _lightsout_spec,
+    }
+
+
+def lookup(env) -> Optional[Tuple[FusedSpec, Optional[int]]]:
+    """(spec, max_steps) for `env` = base or TimeLimit(base), else None.
+
+    Only the exact stacks the pool builds (`TimeLimit(base)` from the `-v*`
+    registry ids, bare `base` from the `-raw` ids) are fusable; any other
+    wrapper changes step semantics the kernel doesn't model.
+    """
+    from repro.core.wrappers import TimeLimit
+
+    max_steps = None
+    if isinstance(env, TimeLimit):
+        max_steps = env.max_steps
+        env = env.env
+    factory = _factories().get(type(env))
+    if factory is None:
+        return None
+    return factory(env), max_steps

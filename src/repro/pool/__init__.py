@@ -14,29 +14,39 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.spaces import sample_batch
-from repro.pool.envpool import EnvPool, PoolState, PoolStep, XlaPool
+from repro.pool.envpool import (EnvPool, FUSED_BACKENDS, PoolState, PoolStep,
+                                XlaPool)
 from repro.pool.host import HostPool
 from repro.pool.sharded import ShardedEnvPool, default_pool_mesh
 
 
 def make_pool(name: str, num_envs: int, backend: str = "xla",
-              mesh=None, **env_kwargs):
+              mesh=None, step_backend: str = "vmap", unroll: int = 1,
+              **env_kwargs):
     """Build a pool for a registered env id.
 
-    backend: "xla" (EnvPool) | "sharded" (ShardedEnvPool) | "host" (HostPool,
-    interpreted baseline_python port — only ids with a baseline).
+    backend: "xla"/"vmap" (EnvPool) | "pallas"/"pallas_interpret"/"jnp"
+    (EnvPool on the fused megastep engine, `unroll` steps per kernel launch)
+    | "sharded" (ShardedEnvPool; combine with `step_backend="pallas"` for
+    the shard_mapped megastep engine) | "host" (HostPool, interpreted
+    baseline_python port — only ids with a baseline).
     """
-    if backend == "xla":
-        return EnvPool(name, num_envs, **env_kwargs)
+    if backend in ("xla", "vmap"):
+        return EnvPool(name, num_envs, backend=step_backend, unroll=unroll,
+                       **env_kwargs)
+    if backend in FUSED_BACKENDS:
+        return EnvPool(name, num_envs, backend=backend, unroll=unroll,
+                       **env_kwargs)
     if backend == "sharded":
-        return ShardedEnvPool(name, num_envs, mesh=mesh, **env_kwargs)
+        return ShardedEnvPool(name, num_envs, mesh=mesh, backend=step_backend,
+                              unroll=unroll, **env_kwargs)
     if backend == "host":
         return HostPool(name, num_envs)
-    raise ValueError(f"unknown pool backend {backend!r}; "
-                     "expected 'xla', 'sharded' or 'host'")
+    raise ValueError(f"unknown pool backend {backend!r}; expected 'xla', "
+                     f"'sharded', 'host' or one of {FUSED_BACKENDS}")
 
 
 __all__ = [
-    "EnvPool", "ShardedEnvPool", "HostPool", "PoolState", "PoolStep",
-    "XlaPool", "sample_batch", "default_pool_mesh", "make_pool",
+    "EnvPool", "FUSED_BACKENDS", "ShardedEnvPool", "HostPool", "PoolState",
+    "PoolStep", "XlaPool", "sample_batch", "default_pool_mesh", "make_pool",
 ]

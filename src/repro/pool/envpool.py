@@ -34,10 +34,16 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import Env, Timestep
+from repro.core.env import Env, Timestep, supports_fused_step
 from repro.core.registry import make as registry_make
 from repro.core.spaces import sample_batch
 from repro.core.wrappers import AutoReset, Vec
+
+#: step-engine backends: "vmap" scans Vec(AutoReset(env)).step; the fused
+#: family routes stepping through the megastep kernel (kernels/envstep) —
+#: "pallas" auto-dispatches (Pallas on TPU, jnp rows elsewhere),
+#: "pallas_interpret"/"jnp" force the interpreter / reference paths.
+FUSED_BACKENDS = ("pallas", "pallas_interpret", "jnp")
 
 
 class PoolState(NamedTuple):
@@ -62,6 +68,7 @@ class XlaPool(NamedTuple):
 
     init: Callable[[jax.Array], PoolState]
     step: Callable[..., Tuple[PoolState, PoolStep]]
+    step_many: Callable[..., Tuple[PoolState, PoolStep]]
 
 
 class EnvPool:
@@ -70,13 +77,37 @@ class EnvPool:
     >>> pool = EnvPool("CartPole-v1", num_envs=256)
     >>> obs = pool.reset(seed=0)                  # (256, 4) on device
     >>> obs, rew, done, info = pool.step(actions) # one compiled dispatch
+
+    backend="pallas" swaps the scan-of-vmap-step inner loop for the fused
+    megastep kernel (kernels/envstep): `step` becomes one kernel launch, and
+    `rollout`/`step_many` fuse `unroll` env steps per launch. Trajectories
+    match the vmap backend (exact for int/bool fields, float rounding only
+    where compilers reassociate). Requires fused-spec support
+    (`core.env.supports_fused_step`); "pallas" resolves to the Pallas kernel
+    on TPU and the row-major jnp reference elsewhere, "pallas_interpret" and
+    "jnp" pin the interpreter / reference paths (tests, debugging).
     """
 
-    def __init__(self, env: Union[Env, str], num_envs: int, **env_kwargs):
+    def __init__(self, env: Union[Env, str], num_envs: int,
+                 backend: str = "vmap", unroll: int = 1, **env_kwargs):
         if isinstance(env, str):
             env = registry_make(env, **env_kwargs)
         self.env = env
         self.num_envs = int(num_envs)
+        self.backend = backend
+        self.unroll = max(int(unroll), 1)
+        if backend == "vmap":
+            self._kernel_backend = None
+        elif backend in FUSED_BACKENDS:
+            self._kernel_backend = "auto" if backend == "pallas" else backend
+            if not supports_fused_step(env):
+                raise ValueError(
+                    f"backend={backend!r} needs fused megastep support, but "
+                    f"{env.name} has none (see repro.kernels.envstep); use "
+                    "backend='vmap'")
+        else:
+            raise ValueError(f"unknown pool backend {backend!r}; expected "
+                             f"'vmap' or one of {FUSED_BACKENDS}")
         self.venv = Vec(AutoReset(env), self.num_envs)
         self._carry: Optional[Tuple[Any, jax.Array]] = None  # (env_state, key)
         self._obs: Optional[jax.Array] = None
@@ -102,13 +133,44 @@ class EnvPool:
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}({self.env.name}, num_envs={self.num_envs})"
 
+    @property
+    def _fused(self) -> bool:
+        return self._kernel_backend is not None
+
     # -- XLA-resident pure API ----------------------------------------------
     def _xla_init(self, key: jax.Array) -> PoolState:
         state, obs = self.venv.reset(key)
         return PoolState(state, obs, jax.random.fold_in(key, 0x57EB))
 
+    def _step_many_core(self, env_state, actions: jax.Array, key: jax.Array,
+                        venv: Optional[Vec] = None):
+        """K batched env steps -> (env_state, (obs, reward, done, info)),
+        outputs stacked with a leading (K, ...) axis. Fused backends run the
+        whole block as one megastep kernel launch; vmap scans the step."""
+        if self._fused:
+            new_state, ts = self.env.fused_step(
+                env_state, actions, num_steps=actions.shape[0],
+                backend=self._kernel_backend)
+            return new_state, (ts.obs, ts.reward, ts.done, ts.info)
+
+        venv = venv if venv is not None else self.venv
+
+        def body(state, xs):
+            a, k = xs
+            ts = venv.step(state, a, k)
+            return ts.state, (ts.obs, ts.reward, ts.done, ts.info)
+
+        k = actions.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(k))
+        return jax.lax.scan(body, env_state, (actions, keys))
+
     def _xla_step(self, carry: PoolState, actions: jax.Array,
                   key: Optional[jax.Array] = None) -> Tuple[PoolState, PoolStep]:
+        if self._fused:
+            ps, out = self._xla_step_many(carry, actions[None], key)
+            first = lambda x: x[0]
+            return ps, PoolStep(out.obs[0], out.reward[0], out.done[0],
+                                jax.tree.map(first, out.info))
         if key is None:
             next_key, key = jax.random.split(carry.key)
         else:
@@ -117,9 +179,26 @@ class EnvPool:
         return (PoolState(ts.state, ts.obs, next_key),
                 PoolStep(ts.obs, ts.reward, ts.done, ts.info))
 
+    def _xla_step_many(self, carry: PoolState, actions: jax.Array,
+                       key: Optional[jax.Array] = None
+                       ) -> Tuple[PoolState, PoolStep]:
+        """Step the pool `actions.shape[0]` times in one fused block.
+
+        `actions` is (K, B[, A]); outputs carry a leading (K, ...) axis.
+        Equivalent to scanning `step` over the block (envs whose dynamics
+        ignore the per-step key make the two paths bit-compatible)."""
+        if key is None:
+            next_key, key = jax.random.split(carry.key)
+        else:
+            next_key = carry.key
+        state, (obs, reward, done, info) = self._step_many_core(
+            carry.env_state, actions, key)
+        return (PoolState(state, obs[-1], next_key),
+                PoolStep(obs, reward, done, info))
+
     def xla(self) -> XlaPool:
-        """Pure `(init, step)` for building the pool into larger programs."""
-        return XlaPool(self._xla_init, self._xla_step)
+        """Pure `(init, step, step_many)` for building into larger programs."""
+        return XlaPool(self._xla_init, self._xla_step, self._xla_step_many)
 
     # -- Gym-style stateful API ----------------------------------------------
     def _stateful_reset(self, key):
@@ -167,6 +246,10 @@ class EnvPool:
             jax.random.PRNGKey(0))
 
     def _rollout(self, key: jax.Array, num_steps: int, render: bool):
+        # Fused backends chunk the loop into `unroll`-step kernel launches
+        # (render mode still needs per-step frames, so it keeps the vmap body).
+        if self._fused and not render:
+            return self._rollout_fused(key, num_steps)
         carry0 = self._xla_init(jax.random.fold_in(key, 0x5EED))
         frame0 = (self.venv.render(carry0.env_state) if render
                   else jnp.zeros((self.num_envs,), jnp.float32))
@@ -183,3 +266,33 @@ class EnvPool:
                 jnp.zeros((self.num_envs,), jnp.int32), frame0)
         (_, rew, eps, frame), _ = jax.lax.scan(body, init, jnp.arange(1, num_steps + 1))
         return rew, eps, frame
+
+    def _rollout_fused(self, key: jax.Array, num_steps: int):
+        """Same rollout, `unroll` steps per megastep launch. RNG mirrors the
+        vmap body (actions from `fold_in(key, i)`, i in 1..num_steps), so
+        trajectories match it step for step."""
+        carry0 = self._xla_init(jax.random.fold_in(key, 0x5EED))
+        kk = max(min(self.unroll, num_steps), 1)  # num_steps=0 -> no chunks
+        n_chunks, rem = divmod(num_steps, kk)
+
+        def chunk(n):
+            def body(carry, c):
+                ps, rew, eps = carry
+                steps = c * kk + 1 + jnp.arange(n)
+                ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(steps)
+                acts = jax.vmap(
+                    lambda s: sample_batch(self.action_space, s, self.num_envs)
+                )(ks)
+                ps, out = self._xla_step_many(ps, acts, key)
+                return (ps, rew + out.reward.sum(0),
+                        eps + out.done.astype(jnp.int32).sum(0)), None
+            return body
+
+        carry = (carry0, jnp.zeros((self.num_envs,), jnp.float32),
+                 jnp.zeros((self.num_envs,), jnp.int32))
+        if n_chunks:
+            carry, _ = jax.lax.scan(chunk(kk), carry, jnp.arange(n_chunks))
+        if rem:
+            carry, _ = chunk(rem)(carry, jnp.asarray(n_chunks))
+        _, rew, eps = carry
+        return rew, eps, jnp.zeros((self.num_envs,), jnp.float32)

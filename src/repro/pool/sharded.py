@@ -42,7 +42,8 @@ class ShardedEnvPool(EnvPool):
     """EnvPool with the batch dim sharded over the mesh's data axes."""
 
     def __init__(self, env: Union[Env, str], num_envs: int,
-                 mesh: Optional[Mesh] = None, **env_kwargs):
+                 mesh: Optional[Mesh] = None, backend: str = "vmap",
+                 unroll: int = 1, **env_kwargs):
         self.mesh = mesh if mesh is not None else default_pool_mesh()
         self.axes: Tuple[str, ...] = (data_axes(self.mesh)
                                       or (self.mesh.axis_names[0],))
@@ -51,9 +52,11 @@ class ShardedEnvPool(EnvPool):
             raise ValueError(
                 f"num_envs={num_envs} must divide evenly over the "
                 f"{self.n_shards}-way data axes {self.axes} of the mesh")
-        super().__init__(env, num_envs, **env_kwargs)
+        super().__init__(env, num_envs, backend=backend, unroll=unroll,
+                         **env_kwargs)
         self._local = Vec(AutoReset(self.env), self.num_envs // self.n_shards)
-        self._bspec = P(self.axes)  # batch dim over the data axes
+        self._bspec = P(self.axes)        # batch dim over the data axes
+        self._cspec = P(None, self.axes)  # (K, B, ...) step-chunk arrays
 
     def _shard_key(self, key: jax.Array) -> jax.Array:
         """Per-shard RNG stream; identity on a 1-device mesh (exact parity)."""
@@ -75,8 +78,29 @@ class ShardedEnvPool(EnvPool):
         )(key)
         return PoolState(state, obs, jax.random.fold_in(key, 0x57EB))
 
+    def _step_many_core(self, env_state, actions, key, venv=None):
+        """The K-step block, shard_mapped: each shard runs the fused megastep
+        kernel (or the scanned vmap step) on its `num_envs / n_shards` slice
+        of the batch — one kernel launch per shard per chunk, still with no
+        collectives in the body."""
+        def local_many(state, a, k):
+            state, (obs, rew, done, info) = EnvPool._step_many_core(
+                self, state, a, self._shard_key(k), venv=self._local)
+            return state, obs, rew, done, info
+
+        state, obs, rew, done, info = shard_map(
+            local_many, mesh=self.mesh,
+            in_specs=(self._bspec, self._cspec, P()),
+            out_specs=(self._bspec, self._cspec, self._cspec, self._cspec,
+                       self._cspec),
+            check_rep=False,
+        )(env_state, actions, key)
+        return state, (obs, rew, done, info)
+
     def _xla_step(self, carry: PoolState, actions: jax.Array,
                   key: Optional[jax.Array] = None) -> Tuple[PoolState, PoolStep]:
+        if self._fused:  # route through the shard_mapped megastep block
+            return EnvPool._xla_step(self, carry, actions, key)
         if key is None:
             next_key, key = jax.random.split(carry.key)
         else:

@@ -43,6 +43,7 @@ class DQNConfig:
     network: str = "mlp"           # "mlp" (memory obs) | "cnn" (pixel obs)
     num_envs: int = 1
     learn_start: int = 100
+    env_backend: str = "vmap"      # pool step engine; "pallas" = fused megastep
 
 
 class DQNState(NamedTuple):
@@ -70,10 +71,21 @@ def _build_net(env: Env, cfg: DQNConfig, key):
     return params, apply_fn
 
 
+def _make_pool(env: Env, cfg: DQNConfig):
+    """The pool's pure xla() handle on the configured step engine.
+
+    env_backend="pallas" routes every env transition through the fused
+    megastep kernel (one launch per train step) instead of the chain of
+    small vmap ops; trajectories — and therefore training — match "vmap"
+    up to float rounding (tests/test_envstep_fused.py).
+    """
+    return EnvPool(env, cfg.num_envs, backend=cfg.env_backend).xla()
+
+
 def dqn_init(env: Env, cfg: DQNConfig, key: jax.Array) -> Tuple[DQNState, Callable]:
     key, knet, kenv = jax.random.split(key, 3)
     params, apply_fn = _build_net(env, cfg, knet)
-    pool = EnvPool(env, cfg.num_envs).xla()
+    pool = _make_pool(env, cfg)
     opt = Adam(lr=cfg.lr).init(params)
     replay = replay_init(cfg.memory_size, env.observation_space.shape)
     state = DQNState(
@@ -114,7 +126,7 @@ def make_learn_step(apply_fn, cfg: DQNConfig):
 
 def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
     """One environment-interaction + learn step; scanned by train_compiled."""
-    pool = EnvPool(env, cfg.num_envs).xla()
+    pool = _make_pool(env, cfg)
     learn = make_learn_step(apply_fn, cfg)
 
     def step_fn(state: DQNState, _):

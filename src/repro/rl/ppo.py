@@ -34,6 +34,7 @@ class PPOConfig:
     max_grad_norm: float = 0.5
     units: Tuple[int, ...] = (64, 64)
     activation: str = "tanh"
+    env_backend: str = "vmap"   # pool step engine; "pallas" = fused megastep
 
 
 class ACParams(NamedTuple):
@@ -58,6 +59,13 @@ def ac_apply(params: ACParams, obs, activation="tanh"):
     return logits, value
 
 
+def _make_pool(env: Env, cfg: PPOConfig):
+    """Pool handle on the configured step engine (see rl/dqn._make_pool):
+    with env_backend="pallas" each collected transition is one fused
+    megastep kernel launch instead of a chain of small vmap ops."""
+    return EnvPool(env, cfg.num_envs, backend=cfg.env_backend).xla()
+
+
 class PPOState(NamedTuple):
     params: ACParams
     opt: AdamState
@@ -71,7 +79,7 @@ def ppo_init(env: Env, cfg: PPOConfig, key: jax.Array) -> PPOState:
     key, knet, kenv = jax.random.split(key, 3)
     obs_dim = int(np.prod(env.observation_space.shape))
     params = ac_init(knet, obs_dim, env.action_space.n, cfg)
-    pool = EnvPool(env, cfg.num_envs).xla()
+    pool = _make_pool(env, cfg)
     opt = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm).init(params)
     zeros = jnp.zeros((cfg.num_envs,), jnp.float32)
     return PPOState(params, opt, pool.init(kenv), key, zeros, zeros)
@@ -93,7 +101,7 @@ def _gae(rewards, values, dones, last_value, discount, lam):
 
 
 def make_update(env: Env, cfg: PPOConfig):
-    pool = EnvPool(env, cfg.num_envs).xla()
+    pool = _make_pool(env, cfg)
     optimizer = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm)
 
     def collect(state: PPOState):

@@ -36,10 +36,24 @@ def replay_init(capacity: int, obs_shape: Tuple[int, ...], act_shape: Tuple[int,
 
 
 def replay_add_batch(state: ReplayState, obs, action, reward, next_obs, done) -> ReplayState:
-    """Insert a batch of B transitions at the ring pointer (wrapping)."""
+    """Insert a batch of B transitions at the ring pointer (wrapping).
+
+    When B > capacity the ring lap would make `.at[idx].set` write the same
+    slot from several batch elements, and XLA scatter order for duplicate
+    indices is unspecified — so the batch is truncated to its last `cap`
+    transitions up front (ring semantics: later writes win; the dropped
+    head would have been overwritten within this same call anyway). `ptr`
+    still advances by the full B, as if every transition had been written.
+    """
     cap = state.obs.shape[0]
     b = obs.shape[0]
-    idx = (state.ptr + jnp.arange(b)) % cap
+    start = state.ptr
+    if b > cap:
+        drop = b - cap  # static (shape-derived), so plain-Python control flow
+        obs, action, reward, next_obs, done = (
+            x[drop:] for x in (obs, action, reward, next_obs, done))
+        start = state.ptr + drop
+    idx = (start + jnp.arange(min(b, cap))) % cap
     return ReplayState(
         obs=state.obs.at[idx].set(obs),
         action=state.action.at[idx].set(action),

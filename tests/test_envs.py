@@ -18,6 +18,30 @@ from repro.envs.classic.mountain_car import MountainCarState
 from repro.envs.classic.pendulum import PendulumState
 
 
+def test_registered_populates_builtins_before_first_make():
+    """Regression: `cairl.registered()` must not return [] in a fresh
+    process where no `make()` has run yet (registry.registered() has to
+    trigger builtin registration itself). Needs a clean interpreter —
+    this test file's imports already populate the registry in-process."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    code = ("from repro.core.registry import registered\n"
+            "ids = registered()\n"
+            "assert 'CartPole-v1' in ids and 'LightsOut-v0' in ids, ids\n"
+            "print(len(ids))\n")
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert int(out.stdout.strip()) >= 12
+
+
 def _drive(env, state, actions, to_state):
     traj = []
     for a in actions:

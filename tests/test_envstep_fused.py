@@ -1,0 +1,246 @@
+"""Fused megastep parity suite: kernels/envstep vs K iterated vmap steps.
+
+The contract (docs/pool.md): for every fused-capable env, `fused_step` /
+`EnvPool(backend=...)` must reproduce the scan-of-vmap-step path — exact for
+int/bool fields (done, board states, step counters), <=1e-5 for floats —
+including auto-reset boundaries and time-limit truncation. The Pallas kernel
+runs under interpret=True here (CPU host); the jnp reference covers the
+dispatch path compiled rollouts use off-TPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make
+from repro.core.env import supports_fused_step
+from repro.core.spaces import sample_batch
+from repro.core.wrappers import AutoReset, TimeLimit, Vec
+from repro.envs.classic import CartPole, MountainCar
+from repro.envs.puzzle import LightsOut
+from repro.kernels.envstep import fused_step
+from repro.launch.hlo_analysis import host_transfer_ops
+from repro.pool import EnvPool, ShardedEnvPool, default_pool_mesh, make_pool
+
+BACKENDS = ("jnp", "pallas_interpret")
+FUSED_IDS = ["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1",
+             "LightsOut-v0", "CartPole-raw"]
+
+
+def _vmap_reference(env, num_envs, key, actions):
+    """K iterated `Vec(AutoReset(env)).step` calls — the oracle trajectory."""
+    venv = Vec(AutoReset(env), num_envs)
+    state0, _ = venv.reset(key)
+    state, outs = state0, []
+    for t in range(actions.shape[0]):
+        ts = venv.step(state, actions[t], jax.random.fold_in(key, t))
+        state = ts.state
+        outs.append((ts.obs, ts.reward, ts.done, ts.info["terminal_obs"]))
+    stack = lambda i: jnp.stack([o[i] for o in outs])
+    return state0, state, stack(0), stack(1), stack(2), stack(3)
+
+
+def _assert_state_close(ref_state, fused_state):
+    for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(fused_state)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        if np.issubdtype(np.asarray(a).dtype, np.integer):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        elif np.asarray(a).dtype == np.uint32:  # PRNG keys
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def _check_parity(env, num_envs, key, actions, backend):
+    st0, st_ref, obs_r, rew_r, done_r, tobs_r = _vmap_reference(
+        env, num_envs, key, actions)
+    st_f, ts = fused_step(env, st0, actions, backend=backend)
+    np.testing.assert_allclose(np.asarray(ts.obs), np.asarray(obs_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ts.reward), np.asarray(rew_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ts.done), np.asarray(done_r))
+    np.testing.assert_allclose(np.asarray(ts.info["terminal_obs"]),
+                               np.asarray(tobs_r), rtol=1e-5, atol=1e-6)
+    _assert_state_close(st_ref, st_f)
+    return done_r
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FUSED_IDS)
+def test_fused_matches_vmap(name, backend):
+    """Random-action parity for every fused env, kernel and reference."""
+    env = make(name)
+    num_envs, k = 5, 12
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    actions = jnp.stack([
+        sample_batch(env.action_space, jax.random.fold_in(key, 100 + t),
+                     num_envs) for t in range(k)])
+    _check_parity(env, num_envs, key, actions, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_autoreset_boundary(backend):
+    """CartPole under always-right falls over well inside K: re-entry fires."""
+    env = TimeLimit(CartPole(), 500)
+    k, num_envs = 40, 6
+    actions = jnp.ones((k, num_envs), jnp.int32)
+    done = _check_parity(env, num_envs, jax.random.PRNGKey(1), actions, backend)
+    assert int(np.asarray(done).sum()) >= num_envs  # every env reset >= once
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_timelimit_truncation(backend):
+    """A 7-step TimeLimit truncates twice inside K=20: counter reset + done."""
+    env = TimeLimit(MountainCar(), 7)
+    k, num_envs = 20, 6
+    actions = jnp.zeros((k, num_envs), jnp.int32)
+    done = _check_parity(env, num_envs, jax.random.PRNGKey(2), actions, backend)
+    assert int(np.asarray(done).sum()) == 2 * num_envs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_lightsout_terminal_and_truncation(backend):
+    """Integer bitboard env: solves (1-press scramble) and truncates."""
+    env = TimeLimit(LightsOut(scramble_presses=1), 5)
+    k, num_envs = 17, 6
+    key = jax.random.PRNGKey(3)
+    actions = jnp.stack([jnp.full((num_envs,), t % 25, jnp.int32)
+                         for t in range(k)])
+    done = _check_parity(env, num_envs, key, actions, backend)
+    assert int(np.asarray(done).sum()) > 0
+
+
+def test_supports_fused_step_gallery_contract():
+    for name in FUSED_IDS:
+        assert supports_fused_step(make(name)), name
+    assert not supports_fused_step(make("Multitask-v0"))
+
+
+def test_unsupported_env_raises():
+    with pytest.raises(ValueError, match="fused megastep"):
+        EnvPool("Multitask-v0", 4, backend="pallas")
+    env = make("Multitask-v0")
+    venv = Vec(AutoReset(env), 4)
+    state, _ = venv.reset(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        env.fused_step(state, jnp.zeros((3, 4), jnp.int32))
+
+
+def test_pool_fused_rollout_matches_vmap():
+    """EnvPool(backend fused, unroll) rollout == vmap rollout, including a
+    remainder chunk (50 = 3*16 + 2)."""
+    key = jax.random.PRNGKey(7)
+    rew_v, eps_v, _ = EnvPool("CartPole-v1", 8).rollout(50, key)
+    rew_f, eps_f, _ = EnvPool("CartPole-v1", 8, backend="jnp",
+                              unroll=16).rollout(50, key)
+    np.testing.assert_allclose(np.asarray(rew_v), np.asarray(rew_f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(eps_v), np.asarray(eps_f))
+    assert int(np.asarray(eps_v).sum()) > 0  # autoresets crossed chunk seams
+
+
+def test_pool_fused_stateful_matches_vmap():
+    p_v = EnvPool("CartPole-v1", 4)
+    p_f = EnvPool("CartPole-v1", 4, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(p_v.reset(0)),
+                                  np.asarray(p_f.reset(0)))
+    for i in range(30):
+        a = p_v.sample_actions(i)
+        out_v, out_f = p_v.step(a), p_f.step(a)
+        for x, y in zip(out_v[:3], out_f[:3]):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out_v[3]["terminal_obs"]),
+                                   np.asarray(out_f[3]["terminal_obs"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_step_many_vmap_engine_matches_fused():
+    """xla().step_many exists on both engines and agrees across them."""
+    key = jax.random.PRNGKey(11)
+    h_v = EnvPool("Pendulum-v1", 4).xla()
+    h_f = EnvPool("Pendulum-v1", 4, backend="jnp").xla()
+    ps_v, ps_f = h_v.init(key), h_f.init(key)
+    acts = jnp.stack([sample_batch(make("Pendulum-v1").action_space,
+                                   jax.random.fold_in(key, i), 4)
+                      for i in range(6)])
+    ps_v, out_v = jax.jit(h_v.step_many)(ps_v, acts)
+    ps_f, out_f = jax.jit(h_f.step_many)(ps_f, acts)
+    assert out_v.obs.shape == (6, 4, 3)
+    np.testing.assert_allclose(np.asarray(out_v.obs), np.asarray(out_f.obs),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_v.reward),
+                               np.asarray(out_f.reward), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out_v.done),
+                                  np.asarray(out_f.done))
+    np.testing.assert_allclose(np.asarray(ps_v.obs), np.asarray(ps_f.obs),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_fused_matches_unsharded_on_one_device_mesh():
+    key = jax.random.PRNGKey(5)
+    sharded = ShardedEnvPool("CartPole-v1", 8, mesh=default_pool_mesh(1),
+                             backend="jnp", unroll=8)
+    plain = EnvPool("CartPole-v1", 8)
+    rew_s, eps_s, _ = sharded.rollout(40, key)
+    rew_u, eps_u, _ = plain.rollout(40, key)
+    np.testing.assert_allclose(np.asarray(rew_s), np.asarray(rew_u),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(eps_s), np.asarray(eps_u))
+    obs_s, obs_u = sharded.reset(seed=1), plain.reset(seed=1)
+    np.testing.assert_array_equal(np.asarray(obs_s), np.asarray(obs_u))
+    for i in range(3):
+        a = plain.sample_actions(i)
+        out_s, out_u = sharded.step(a), plain.step(a)
+        for s, u in zip(out_s[:3], out_u[:3]):
+            np.testing.assert_allclose(np.asarray(s), np.asarray(u),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_pool_fused_step_loop_is_device_resident():
+    """Acceptance: zero host transfers in the compiled fused rollout."""
+    pool = EnvPool("CartPole-v1", 16, backend="jnp", unroll=8)
+    hlo = pool.rollout_lowered(64).compile().as_text()
+    assert host_transfer_ops(hlo) == []
+
+
+def test_make_pool_fused_backend():
+    pool = make_pool("CartPole-v1", 4, backend="pallas", unroll=4)
+    assert isinstance(pool, EnvPool) and pool.unroll == 4
+    assert pool.backend == "pallas"
+    sharded = make_pool("CartPole-v1", 4, backend="sharded",
+                        mesh=default_pool_mesh(1), step_backend="jnp",
+                        unroll=4)
+    assert isinstance(sharded, ShardedEnvPool)
+    assert sharded.backend == "jnp" and sharded.unroll == 4
+
+
+def test_dqn_training_parity_across_engines():
+    from repro.rl.dqn import DQNConfig, train_compiled
+
+    env = make("CartPole-v1")
+    key = jax.random.PRNGKey(0)
+    cfg = DQNConfig(num_envs=4, learn_start=20, memory_size=200)
+    _, _, m_v = train_compiled(env, cfg, 40, key)
+    _, _, m_f = train_compiled(
+        env, dataclasses.replace(cfg, env_backend="jnp"), 40, key)
+    np.testing.assert_allclose(np.asarray(m_v["return"]),
+                               np.asarray(m_f["return"]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_v["loss"]),
+                               np.asarray(m_f["loss"]), rtol=2e-4, atol=1e-5)
+
+
+def test_ppo_training_parity_across_engines():
+    from repro.rl.ppo import PPOConfig, train
+
+    env = make("CartPole-v1")
+    key = jax.random.PRNGKey(0)
+    cfg = PPOConfig(num_envs=8, rollout_len=32, epochs=2, minibatches=2)
+    _, m_v = train(env, cfg, 2, key)
+    _, m_f = train(env, dataclasses.replace(cfg, env_backend="jnp"), 2, key)
+    np.testing.assert_allclose(np.asarray(m_v["return"]),
+                               np.asarray(m_f["return"]), rtol=1e-4, atol=1e-4)

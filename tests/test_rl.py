@@ -20,6 +20,26 @@ def test_replay_ring_wraps():
     assert 0.0 not in vals and {1.0, 2.0} <= vals
 
 
+def test_replay_batch_larger_than_capacity_keeps_latest():
+    """Regression: a batch wider than the ring must behave like sequential
+    insertion (later transitions win), not scatter with duplicate indices
+    (unspecified order). With cap=4, ptr=0 and values 0..5, slot j must hold
+    the last i with i % 4 == j: [4, 5, 2, 3]."""
+    st = replay_init(4, (1,))
+    batch = jnp.arange(6, dtype=jnp.float32)[:, None]
+    st = replay_add_batch(st, batch, jnp.arange(6, dtype=jnp.int32),
+                          jnp.arange(6, dtype=jnp.float32), batch,
+                          jnp.zeros((6,)))
+    assert np.asarray(st.obs)[:, 0].tolist() == [4.0, 5.0, 2.0, 3.0]
+    assert np.asarray(st.action).tolist() == [4, 5, 2, 3]
+    assert int(st.ptr) == 2 and int(st.size) == 4
+    # and the pointer keeps ring semantics for the next (normal) insert
+    st = replay_add_batch(st, jnp.full((1, 1), 9.0),
+                          jnp.asarray([9], jnp.int32), jnp.asarray([9.0]),
+                          jnp.full((1, 1), 9.0), jnp.zeros((1,)))
+    assert np.asarray(st.obs)[:, 0].tolist() == [4.0, 5.0, 9.0, 3.0]
+
+
 def test_replay_sample_only_valid():
     st = replay_init(16, (1,))
     st = replay_add_batch(st, jnp.ones((4, 1)), jnp.zeros((4,), jnp.int32),
