@@ -3,10 +3,15 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+# Skip the heavy fused/pool sweeps and training-parity tests (marked `slow`)
+# for a quick inner-loop signal; `make test` remains the tier-1 gate.
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
 
 # Fast end-to-end benchmark smoke: pool scaling sweep + HLO device-residency
 # check (the fig4 acceptance gate), small step counts — and the JSON perf

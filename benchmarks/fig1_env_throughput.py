@@ -19,6 +19,9 @@ from repro.launch.hlo_analysis import host_transfer_ops
 from repro.pool import EnvPool, HostPool
 
 ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
+# Arcade pixel games: every step renders 84×84 observations on device, the
+# paper's software-rendering workload (§II-B) — console mode is render mode.
+ARCADE = ["Pong-v0"]
 
 
 def bench_compiled(name: str, steps: int, batch: int, render: bool,
@@ -48,9 +51,14 @@ def bench_python(name: str, steps: int, render: bool, trials: int = 2) -> float:
 
 def run(console_steps: int = 2000, render_steps: int = 200, batch: int = 64) -> Dict:
     rows = {}
-    for name in ENVS:
+    for name in ENVS + ARCADE:
+        # Arcade ids observe rendered frames, so their compiled "console"
+        # mode rasterises every step — the interpreted comparator must
+        # render too or the ratio measures rendering-vs-nothing.
+        pixel = name in ARCADE
+        p_steps = max(console_steps // 4, 25) if pixel else console_steps
         c_sps = bench_compiled(name, console_steps, batch, render=False)
-        p_sps = bench_python(name, console_steps, render=False)
+        p_sps = bench_python(name, p_steps, render=pixel)
         cr_sps = bench_compiled(name, render_steps, batch, render=True)
         pr_sps = bench_python(name, max(render_steps // 4, 25), render=True)
         rows[name] = {
@@ -71,23 +79,32 @@ def run_backends(steps: int = 2000, batch: int = 64, unroll: int = 32,
 
     The pallas pool's compiled rollout is also HLO-checked for host
     transfers (must be 0 — device residency survives the fused path).
+    Arcade pixel envs run with a capped unroll: every fused chunk
+    materialises K·B rendered frames, so deep unrolls trade throughput for
+    framebuffer memory.
     """
+    from repro.core.registry import make
+
     rows: Dict[str, Dict] = {}
-    for name in (envs or ENVS):
+    for name in (envs or ENVS + ARCADE):
         r: Dict = {}
+        pixel = len(make(name).observation_space.shape) >= 2
+        u = min(unroll, 8) if pixel else unroll
         if "vmap" in backends:
             r["vmap_sps"] = bench_compiled(name, steps, batch, render=False)
         if "pallas" in backends:
-            pool = EnvPool(name, batch, backend="pallas", unroll=unroll)
+            pool = EnvPool(name, batch, backend="pallas", unroll=u)
             transfers = host_transfer_ops(
                 pool.rollout_lowered(min(steps, 256)).compile().as_text())
             r["host_transfers"] = len(transfers)
             r["pallas_sps"] = bench_compiled(name, steps, batch, render=False,
-                                             backend="pallas", unroll=unroll)
+                                             backend="pallas", unroll=u)
         if "vmap_sps" in r and "pallas_sps" in r:
             r["pallas_vs_vmap"] = r["pallas_sps"] / r["vmap_sps"]
         if include_host:
-            r["gym_sps"] = bench_python(name, min(steps, 2000), render=False)
+            # Pixel envs: the interpreted side renders too (see run()).
+            h_steps = min(steps, 500) if pixel else min(steps, 2000)
+            r["gym_sps"] = bench_python(name, h_steps, render=pixel)
         rows[name] = r
     return rows
 

@@ -80,6 +80,18 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
                 "unroll": unroll,
             }
 
+    # Arcade pixel workload: fused megastep game logic + per-chunk on-device
+    # rendering — the heavy-env case where pooled execution pays off most.
+    if env_name == "CartPole-v1":
+        pixel_batch = min(64, max(batches))
+        pool = EnvPool("Pong-v0", pixel_batch, backend="pallas", unroll=8)
+        rows[f"pixel_pong_batch{pixel_batch}"] = {
+            "steps_per_s": bench_pool(pool, min(steps, 500)),
+            "batch": pixel_batch,
+            "host_transfers": len(check_device_resident(pool, steps=32)),
+            "unroll": 8,
+        }
+
     n_dev = len(jax.devices())
     dev_counts = sorted({1, n_dev} | ({2} if n_dev >= 2 else set()))
     base = max(batches)

@@ -6,6 +6,7 @@ from repro.core.spaces import Box, Discrete, MultiDiscrete, Space
 from repro.core.wrappers import (
     AutoReset,
     FlattenObs,
+    FrameStack,
     ObsToPixels,
     RewardScale,
     TimeLimit,
@@ -17,5 +18,6 @@ __all__ = [
     "Env", "Timestep", "make", "make_compat", "register", "registered",
     "PythonRunner", "Trajectory", "episode_return", "rollout", "rollout_random",
     "Box", "Discrete", "MultiDiscrete", "Space",
-    "AutoReset", "FlattenObs", "ObsToPixels", "RewardScale", "TimeLimit", "Vec", "Wrapper",
+    "AutoReset", "FlattenObs", "FrameStack", "ObsToPixels", "RewardScale",
+    "TimeLimit", "Vec", "Wrapper",
 ]

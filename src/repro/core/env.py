@@ -18,7 +18,11 @@ from repro.core.spaces import Space
 
 
 class Timestep(NamedTuple):
-    """One transition. `done` folds terminal+truncation like classic Gym."""
+    """One transition. `done` folds terminal+truncation like classic Gym;
+    wrappers keep the two distinguishable through `info`: `TimeLimit` sets
+    `info["truncated"]` (True only on a time-limit cut of a non-terminal
+    state), so learners can bootstrap through truncation (rl/dqn.py,
+    rl/ppo.py) while still treating `done` as the episode boundary."""
 
     state: Any
     obs: jax.Array

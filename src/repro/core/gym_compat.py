@@ -25,7 +25,17 @@ class _SpaceShim:
         self._rng = rng
 
     def __getattr__(self, item):
-        return getattr(self._space, item)
+        # copy/pickle probe dunders (__deepcopy__, __reduce_ex__, ...) before
+        # __init__ has populated __dict__; dereferencing self._space here
+        # would re-enter __getattr__ forever. Refuse underscore lookups and
+        # fetch _space without re-triggering attribute fallback.
+        if item.startswith("_"):
+            raise AttributeError(item)
+        try:
+            space = object.__getattribute__(self, "_space")
+        except AttributeError:
+            raise AttributeError(item) from None
+        return getattr(space, item)
 
     def sample(self):
         seed = int(self._rng.integers(0, 2**31 - 1))
@@ -33,12 +43,19 @@ class _SpaceShim:
 
 
 class GymCompat:
-    """`e = cairl.make("CartPole-v1"); e.reset(); e.step(a); e.render()`."""
+    """`e = cairl.make("CartPole-v1"); e.reset(); e.step(a); e.render()`.
 
-    def __init__(self, env: Env, seed: int = 0):
+    `new_step_api=True` switches `step` to the 5-tuple Gym >= 0.26 API
+    `(obs, reward, terminated, truncated, info)`, mapping the functional
+    core's `info["truncated"]` signal (core/wrappers.TimeLimit); the default
+    stays the classic 4-tuple with folded `done`.
+    """
+
+    def __init__(self, env: Env, seed: int = 0, new_step_api: bool = False):
         self._env = env
         self._key = jax.random.PRNGKey(seed)
         self._state: Any = None
+        self.new_step_api = bool(new_step_api)
         self._rng = np.random.default_rng(seed)
         self.observation_space = _SpaceShim(env.observation_space, self._rng)
         self.action_space = _SpaceShim(env.action_space, self._rng)
@@ -54,6 +71,10 @@ class GymCompat:
     def seed(self, seed: int) -> None:
         self._key = jax.random.PRNGKey(seed)
         self._rng = np.random.default_rng(seed)
+        # Drop any in-flight episode: its state was produced by the previous
+        # seed's stream, so stepping it after reseeding would silently
+        # continue the old episode. Force a fresh reset() instead.
+        self._state = None
 
     def reset(self) -> np.ndarray:
         self._key, sub = jax.random.split(self._key)
@@ -66,7 +87,14 @@ class GymCompat:
         self._key, sub = jax.random.split(self._key)
         ts = self._step(self._state, jnp.asarray(action), sub)
         self._state = ts.state
-        return np.asarray(ts.obs), float(ts.reward), bool(ts.done), {}
+        obs, reward, done = np.asarray(ts.obs), float(ts.reward), bool(ts.done)
+        truncated = bool(np.asarray(ts.info["truncated"])) \
+            if "truncated" in ts.info else False
+        info = {k: np.asarray(v) for k, v in ts.info.items()
+                if k != "truncated"}
+        if self.new_step_api:
+            return obs, reward, done and not truncated, truncated, info
+        return obs, reward, done, info
 
     def render(self):
         if self._render is None:

@@ -33,11 +33,15 @@ def make(name: str, **kwargs) -> Env:
     return _REGISTRY[name](**kwargs)
 
 
-def make_compat(name: str, seed: int = 0, **kwargs):
-    """Gym drop-in: stateful reset()/step()/render() object (Listing 2)."""
+def make_compat(name: str, seed: int = 0, new_step_api: bool = False, **kwargs):
+    """Gym drop-in: stateful reset()/step()/render() object (Listing 2).
+
+    `new_step_api=True` returns the Gym >= 0.26 5-tuple
+    `(obs, reward, terminated, truncated, info)` from `step`.
+    """
     from repro.core.gym_compat import GymCompat
 
-    return GymCompat(make(name, **kwargs), seed=seed)
+    return GymCompat(make(name, **kwargs), seed=seed, new_step_api=new_step_api)
 
 
 _BUILTINS_LOADED = False

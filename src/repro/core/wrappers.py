@@ -15,6 +15,7 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.env import Env, Timestep
 from repro.core.spaces import Box, Space, flatten_obs, flatten_space
@@ -61,7 +62,16 @@ class TimeLimitState(NamedTuple):
 
 
 class TimeLimit(Wrapper):
-    """Truncate episodes at `max_steps` (paper's TimeLimit / Listing 1)."""
+    """Truncate episodes at `max_steps` (paper's TimeLimit / Listing 1).
+
+    `done` still folds terminal | truncation (the autoreset/episode boundary),
+    but the truncation bit is surfaced separately as `info["truncated"]` —
+    True only when the cut is the time limit and the state is *not*
+    env-terminal. Value-based learners must bootstrap through truncated
+    transitions (they are not terminal states); conflating the two biases
+    the targets of every env that mostly ends by time limit (Pendulum,
+    MountainCar).
+    """
 
     def __init__(self, env: Env, max_steps: int):
         super().__init__(env)
@@ -74,8 +84,11 @@ class TimeLimit(Wrapper):
     def step(self, state: TimeLimitState, action, key):
         ts = self.env.step(state.inner, action, key)
         t = state.t + 1
-        done = ts.done | (t >= self.max_steps)
-        return ts._replace(state=TimeLimitState(ts.state, t), done=done)
+        truncated = (t >= self.max_steps) & ~ts.done
+        info = dict(ts.info)
+        info["truncated"] = truncated
+        return ts._replace(state=TimeLimitState(ts.state, t),
+                           done=ts.done | truncated, info=info)
 
     def render(self, state: TimeLimitState):
         return self.env.render(state.inner)
@@ -198,3 +211,44 @@ class ObsToPixels(Wrapper):
     def step(self, state, action, key):
         ts = self.env.step(state, action, key)
         return ts._replace(obs=self.env.render(ts.state))
+
+
+class FrameStackState(NamedTuple):
+    inner: Any
+    frames: jax.Array  # (num_frames, ...) most-recent-last ring of observations
+
+
+class FrameStack(Wrapper):
+    """Stack the last `num_frames` observations along a new leading axis.
+
+    The classic pixel-RL pipeline (DQN on Atari) over any env: reset fills
+    the stack with the initial observation, each step shifts the oldest
+    frame out and appends the newest. `FrameStack(ObsToPixels(env), 4)` is
+    the arcade observation mode DQN's CNN consumes (rl/networks.cnn_apply
+    treats the stack axis as input channels).
+    """
+
+    def __init__(self, env: Env, num_frames: int = 4):
+        super().__init__(env)
+        self.num_frames = int(num_frames)
+
+    @property
+    def observation_space(self) -> Box:  # type: ignore[override]
+        inner = self.env.observation_space
+        return Box(low=float(np.min(np.asarray(inner.low))),
+                   high=float(np.max(np.asarray(inner.high))),
+                   shape=(self.num_frames,) + tuple(inner.shape),
+                   dtype=inner.dtype)
+
+    def reset(self, key):
+        inner, obs = self.env.reset(key)
+        frames = jnp.broadcast_to(obs, (self.num_frames,) + obs.shape)
+        return FrameStackState(inner, frames), frames
+
+    def step(self, state: FrameStackState, action, key):
+        ts = self.env.step(state.inner, action, key)
+        frames = jnp.concatenate([state.frames[1:], ts.obs[None]], axis=0)
+        return ts._replace(state=FrameStackState(ts.state, frames), obs=frames)
+
+    def render(self, state: FrameStackState):
+        return self.env.render(state.inner)

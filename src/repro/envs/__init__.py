@@ -4,7 +4,8 @@ Registered ids mirror Gym's, with Gym's default TimeLimit wrapping, so
 `cairl.make("CartPole-v1")` is behaviourally a drop-in (paper Listing 2).
 """
 from repro.core.registry import register
-from repro.core.wrappers import TimeLimit
+from repro.core.wrappers import FrameStack, ObsToPixels, TimeLimit
+from repro.envs.arcade import Breakout, Pong
 from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
 from repro.envs.multitask import Multitask
 from repro.envs.puzzle import LightsOut
@@ -16,13 +17,25 @@ register("Pendulum-v1", lambda **kw: TimeLimit(Pendulum(**kw), 200))
 register("Multitask-v0", lambda **kw: TimeLimit(Multitask(**kw), 1000))
 register("LightsOut-v0", lambda **kw: TimeLimit(LightsOut(**kw), 100))
 
+# Arcade pixel games (paper §IV-C): observations are 4 stacked 84×84 frames
+# rendered on device by kernels/raster — the raw-pixels mode end to end.
+register("Pong-v0",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Pong(**kw), 1000)), 4))
+register("Breakout-v0",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Breakout(**kw), 1000)),
+                                 4))
+
 # Raw (unwrapped) variants for custom composition, mirroring CaiRL's
 # template-composition style: Flatten<TimeLimit<200, CartPoleEnv>>().
+# Arcade `-raw` ids expose the state-vector ("virtual Flash memory") obs.
 register("CartPole-raw", CartPole)
 register("Acrobot-raw", Acrobot)
 register("MountainCar-raw", MountainCar)
 register("Pendulum-raw", Pendulum)
 register("Multitask-raw", Multitask)
 register("LightsOut-raw", LightsOut)
+register("Pong-raw", Pong)
+register("Breakout-raw", Breakout)
 
-__all__ = ["Acrobot", "CartPole", "MountainCar", "Pendulum", "Multitask", "LightsOut"]
+__all__ = ["Acrobot", "Breakout", "CartPole", "MountainCar", "Pendulum",
+           "Multitask", "LightsOut", "Pong"]

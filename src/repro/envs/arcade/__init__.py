@@ -1,0 +1,13 @@
+"""Arcade pixel-game suite — Flash-era games on the Pallas rasteriser.
+
+The paper's headline workload class (§II-B, §IV-C): simple 2D games whose
+observations are software-rendered frames living where the learner reads
+them. Both games are pure-JAX functional envs with elementwise dynamics, so
+they run on every execution engine in the repo — vmap pools, the fused
+Pallas megastep kernel (with per-chunk on-device pixel rendering), sharded
+pools — and ship interpreted baselines for the Fig. 1 comparison.
+"""
+from repro.envs.arcade.breakout import Breakout
+from repro.envs.arcade.pong import Pong
+
+__all__ = ["Breakout", "Pong"]

@@ -1,0 +1,149 @@
+"""Breakout — Flash-era brick-breaker on the on-toolkit rasteriser (§IV-C).
+
+The agent drives a paddle (Discrete(3): left/stay/right) returning a ball
+into a 4×6 brick grid; each broken brick pays +1, clearing the board pays a
++5 bonus and ends the episode, dropping the ball past the paddle ends it
+with no reward. Coordinates are the rasteriser's normalised [0, 1]²
+(x rightward, y downward), bricks spanning y ∈ [BRICK_TOP, BRICK_TOP+R·H).
+
+Dynamics are elementwise (`jnp.where` + iota comparisons over the brick
+grid — the LightsOut bitboard idiom), so the identical arithmetic runs in
+the env step here, the row-major Pallas megastep spec
+(kernels/envstep/specs.py), and the interpreted baseline
+(envs/baseline_python/arcade.py). The observation is the flattened state
+(ball + paddle + brick bitboard); the registered `Breakout-v0` id wraps it
+with `ObsToPixels`/`FrameStack` for on-device raw-pixel observations.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+BRICK_ROWS = 4
+BRICK_COLS = 6
+BRICK_TOP = 0.12       # top of the brick region
+BRICK_H = 0.05         # brick row height
+PADDLE_Y = 0.92        # paddle plane
+PADDLE_HALF = 0.14     # paddle half-width
+PADDLE_SPEED = 0.06    # paddle speed per step
+BALL_VX0 = 0.022       # serve horizontal speed
+BALL_VY0 = 0.03        # serve vertical speed (downward)
+SPIN = 0.15            # horizontal deflection per unit of paddle offset
+MAX_VX = 0.04          # horizontal ball speed cap
+CLEAR_BONUS = 5.0      # board-clear bonus reward
+
+
+class BreakoutState(NamedTuple):
+    ball_x: jax.Array
+    ball_y: jax.Array
+    ball_vx: jax.Array
+    ball_vy: jax.Array
+    paddle_x: jax.Array
+    bricks: jax.Array   # (BRICK_ROWS, BRICK_COLS) int32 in {0, 1}
+
+
+class Breakout(Env):
+    observation_space = Box(low=-1.0, high=1.0,
+                            shape=(5 + BRICK_ROWS * BRICK_COLS,))
+    action_space = Discrete(3)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        kx, kd = jax.random.split(key)
+        serve = jnp.where(jax.random.bernoulli(kd), 1.0, -1.0)
+        state = BreakoutState(
+            ball_x=jax.random.uniform(kx, (), minval=0.2, maxval=0.8),
+            ball_y=jnp.asarray(0.55, jnp.float32),
+            ball_vx=(BALL_VX0 * serve).astype(jnp.float32),
+            ball_vy=jnp.asarray(BALL_VY0, jnp.float32),
+            paddle_x=jnp.asarray(0.5, jnp.float32),
+            bricks=jnp.ones((BRICK_ROWS, BRICK_COLS), jnp.int32),
+        )
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s: BreakoutState):
+        # obs == flattened state, in flatten-row order (fused-spec contract).
+        return jnp.concatenate([
+            jnp.stack([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy, s.paddle_x]),
+            s.bricks.reshape(-1).astype(jnp.float32),
+        ]).astype(jnp.float32)
+
+    def step(self, state: BreakoutState, action, key):
+        move = (jnp.asarray(action) - 1).astype(jnp.float32)  # {-1, 0, +1}
+        paddle_x = jnp.clip(state.paddle_x + move * PADDLE_SPEED,
+                            PADDLE_HALF, 1.0 - PADDLE_HALF)
+
+        nx = state.ball_x + state.ball_vx
+        ny = state.ball_y + state.ball_vy
+        vx, vy = state.ball_vx, state.ball_vy
+        # side walls
+        vx = jnp.where((nx < 0.0) | (nx > 1.0), -vx, vx)
+        nx = jnp.where(nx < 0.0, -nx, nx)
+        nx = jnp.where(nx > 1.0, 2.0 - nx, nx)
+        # ceiling
+        vy = jnp.where(ny < 0.0, -vy, vy)
+        ny = jnp.where(ny < 0.0, -ny, ny)
+        # paddle bounce (crossing the paddle plane within reach)
+        hit_pad = ((state.ball_y < PADDLE_Y) & (ny >= PADDLE_Y)
+                   & (jnp.abs(nx - paddle_x) <= PADDLE_HALF))
+        vx = jnp.where(hit_pad, jnp.clip(vx + (nx - paddle_x) * SPIN,
+                                         -MAX_VX, MAX_VX), vx)
+        vy = jnp.where(hit_pad, -vy, vy)
+        ny = jnp.where(hit_pad, 2.0 * PADDLE_Y - ny, ny)
+        # brick collision: the cell under the ball, via iota comparisons
+        # (float planes so the megastep row spec is bit-identical)
+        board = state.bricks.astype(jnp.float32)
+        rr = jax.lax.broadcasted_iota(jnp.float32, (BRICK_ROWS, BRICK_COLS), 0)
+        cc = jax.lax.broadcasted_iota(jnp.float32, (BRICK_ROWS, BRICK_COLS), 1)
+        cell_r = jnp.floor((ny - BRICK_TOP) / BRICK_H)
+        cell_c = jnp.floor(nx * BRICK_COLS)
+        in_region = ((ny >= BRICK_TOP)
+                     & (ny < BRICK_TOP + BRICK_ROWS * BRICK_H))
+        mask = ((rr == cell_r) & (cc == cell_c)).astype(jnp.float32) \
+            * in_region.astype(jnp.float32) * board
+        broke = jnp.sum(mask)            # 0.0 or 1.0: at most one cell matches
+        new_board = board - mask
+        vy = jnp.where(broke > 0.0, -vy, vy)
+
+        cleared = jnp.sum(new_board) == 0.0
+        lost = ny > 1.0
+        done = cleared | lost
+        reward = broke + jnp.where(cleared, CLEAR_BONUS, 0.0)
+        ns = BreakoutState(nx, ny, vx, vy, paddle_x,
+                           new_board.astype(jnp.int32))
+        return Timestep(ns, self._obs(ns), reward.astype(jnp.float32), done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: BreakoutState):
+        r, c = BRICK_ROWS, BRICK_COLS
+        bx = jnp.tile((jnp.arange(c, dtype=jnp.float32) + 0.5) / c, r)
+        by = jnp.repeat(BRICK_TOP + (jnp.arange(r, dtype=jnp.float32) + 0.5)
+                        * BRICK_H, c)
+        half_w = jnp.full((r * c,), 0.35 / c, jnp.float32)
+        brick_segs = jnp.stack([bx - half_w, by, bx + half_w, by,
+                                jnp.full((r * c,), 0.016, jnp.float32)],
+                               axis=-1)
+        brick_int = state.bricks.reshape(-1).astype(jnp.float32) * 0.7
+        dyn = jnp.stack([
+            jnp.stack([state.paddle_x - PADDLE_HALF, jnp.asarray(PADDLE_Y),
+                       state.paddle_x + PADDLE_HALF, jnp.asarray(PADDLE_Y),
+                       jnp.asarray(0.018)]),                          # paddle
+            jnp.stack([state.ball_x, state.ball_y, state.ball_x,
+                       state.ball_y, jnp.asarray(0.02)]),             # ball
+        ])
+        segs = jnp.concatenate([brick_segs, dyn], axis=0)
+        intens = jnp.concatenate(
+            [brick_int, jnp.asarray([1.0, 0.9], jnp.float32)])
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: BreakoutState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -1,0 +1,130 @@
+"""Pong — Flash-era arcade rally game on the on-toolkit rasteriser (§IV-C).
+
+Single-player Pong against a scripted tracking opponent: the agent drives the
+right paddle (Discrete(3): up/stay/down), the opponent tracks the ball with a
+capped speed, and the episode is one rally — +1 when the ball passes the
+opponent, -1 when it passes the agent. Coordinates are the rasteriser's
+normalised [0, 1]² (x rightward, y downward).
+
+Everything is elementwise `jnp.where` arithmetic, so the same dynamics run
+three ways: here (functional pytree step), as row-major VPU ops inside the
+Pallas megastep kernel (kernels/envstep/specs.py — mirrored
+operation-for-operation), and as the interpreted baseline
+(envs/baseline_python/arcade.py, shared constants). The observation is
+exactly the flattened state vector (the paper's "virtual Flash memory"
+mode); wrap with `ObsToPixels`/`FrameStack` — the registered `Pong-v0` id —
+for the raw-pixel mode rendered on device by kernels/raster.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Box, Discrete
+
+PADDLE_HALF = 0.12     # paddle half-height
+PADDLE_SPEED = 0.05    # agent paddle speed per step
+OPP_SPEED = 0.03       # opponent tracking speed cap (slower => beatable)
+BALL_SPEED_X = 0.035   # horizontal ball speed (constant magnitude)
+SPIN = 0.25            # vertical deflection per unit of paddle-centre offset
+MAX_VY = 0.05          # vertical ball speed cap
+PLAYER_X = 0.92        # agent paddle plane (right)
+OPP_X = 0.08           # opponent paddle plane (left)
+
+
+class PongState(NamedTuple):
+    ball_x: jax.Array
+    ball_y: jax.Array
+    ball_vx: jax.Array
+    ball_vy: jax.Array
+    player_y: jax.Array
+    opp_y: jax.Array
+
+
+class Pong(Env):
+    observation_space = Box(low=(0.0, 0.0, -1.0, -1.0, 0.0, 0.0),
+                            high=(1.0, 1.0, 1.0, 1.0, 1.0, 1.0), shape=(6,))
+    action_space = Discrete(3)
+    frame_shape = (84, 84)
+
+    def reset(self, key):
+        ky, kd, kv = jax.random.split(key, 3)
+        serve = jnp.where(jax.random.bernoulli(kd), 1.0, -1.0)
+        state = PongState(
+            ball_x=jnp.asarray(0.5, jnp.float32),
+            ball_y=jax.random.uniform(ky, (), minval=0.3, maxval=0.7),
+            ball_vx=(BALL_SPEED_X * serve).astype(jnp.float32),
+            ball_vy=jax.random.uniform(kv, (), minval=-0.02, maxval=0.02),
+            player_y=jnp.asarray(0.5, jnp.float32),
+            opp_y=jnp.asarray(0.5, jnp.float32),
+        )
+        return state, self._obs(state)
+
+    @staticmethod
+    def _obs(s: PongState):
+        # obs == flattened state, in flatten-row order (fused-spec contract).
+        return jnp.stack([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy,
+                          s.player_y, s.opp_y]).astype(jnp.float32)
+
+    def step(self, state: PongState, action, key):
+        move = (jnp.asarray(action) - 1).astype(jnp.float32)  # {-1, 0, +1}
+        player_y = jnp.clip(state.player_y + move * PADDLE_SPEED,
+                            PADDLE_HALF, 1.0 - PADDLE_HALF)
+        opp_y = state.opp_y + jnp.clip(state.ball_y - state.opp_y,
+                                       -OPP_SPEED, OPP_SPEED)
+        opp_y = jnp.clip(opp_y, PADDLE_HALF, 1.0 - PADDLE_HALF)
+
+        nx = state.ball_x + state.ball_vx
+        ny = state.ball_y + state.ball_vy
+        vx, vy = state.ball_vx, state.ball_vy
+        # top/bottom wall bounce (reflect position and velocity)
+        vy = jnp.where((ny < 0.0) | (ny > 1.0), -vy, vy)
+        ny = jnp.where(ny < 0.0, -ny, ny)
+        ny = jnp.where(ny > 1.0, 2.0 - ny, ny)
+        # agent paddle (right plane): reflect on crossing within paddle reach
+        hit_p = ((state.ball_x < PLAYER_X) & (nx >= PLAYER_X)
+                 & (jnp.abs(ny - player_y) <= PADDLE_HALF))
+        vy = jnp.where(hit_p, jnp.clip(vy + (ny - player_y) * SPIN,
+                                       -MAX_VY, MAX_VY), vy)
+        vx = jnp.where(hit_p, -vx, vx)
+        nx = jnp.where(hit_p, 2.0 * PLAYER_X - nx, nx)
+        # opponent paddle (left plane)
+        hit_o = ((state.ball_x > OPP_X) & (nx <= OPP_X)
+                 & (jnp.abs(ny - opp_y) <= PADDLE_HALF))
+        vy = jnp.where(hit_o, jnp.clip(vy + (ny - opp_y) * SPIN,
+                                       -MAX_VY, MAX_VY), vy)
+        vx = jnp.where(hit_o, -vx, vx)
+        nx = jnp.where(hit_o, 2.0 * OPP_X - nx, nx)
+
+        score_p = nx < 0.0   # past the opponent: agent point
+        score_o = nx > 1.0   # past the agent: opponent point
+        done = score_p | score_o
+        reward = score_p.astype(jnp.float32) - score_o.astype(jnp.float32)
+        ns = PongState(nx, ny, vx, vy, player_y, opp_y)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: PongState):
+        segs = jnp.stack([
+            jnp.stack([jnp.asarray(0.5), jnp.asarray(0.02), jnp.asarray(0.5),
+                       jnp.asarray(0.98), jnp.asarray(0.004)]),       # net
+            jnp.stack([jnp.asarray(OPP_X), state.opp_y - PADDLE_HALF,
+                       jnp.asarray(OPP_X), state.opp_y + PADDLE_HALF,
+                       jnp.asarray(0.02)]),                           # opponent
+            jnp.stack([jnp.asarray(PLAYER_X), state.player_y - PADDLE_HALF,
+                       jnp.asarray(PLAYER_X), state.player_y + PADDLE_HALF,
+                       jnp.asarray(0.02)]),                           # agent
+            jnp.stack([state.ball_x, state.ball_y, state.ball_x,
+                       state.ball_y, jnp.asarray(0.022)]),            # ball
+        ])
+        intens = jnp.asarray([0.25, 0.7, 1.0, 0.9], jnp.float32)
+        return segs.astype(jnp.float32), intens
+
+    def render(self, state: PongState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

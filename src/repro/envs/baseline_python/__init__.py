@@ -1,4 +1,5 @@
 """Interpreted-Python baselines ("AI Gym" comparator in the paper's Fig. 1/2)."""
+from repro.envs.baseline_python.arcade import BreakoutPy, PongPy
 from repro.envs.baseline_python.classic import AcrobotPy, CartPolePy, MountainCarPy, PendulumPy
 from repro.envs.baseline_python.multitask import MultitaskPy
 
@@ -8,6 +9,9 @@ BASELINES = {
     "MountainCar-v0": MountainCarPy,
     "Pendulum-v1": PendulumPy,
     "Multitask-v0": MultitaskPy,
+    "Pong-v0": PongPy,
+    "Breakout-v0": BreakoutPy,
 }
 
-__all__ = ["CartPolePy", "AcrobotPy", "MountainCarPy", "PendulumPy", "MultitaskPy", "BASELINES"]
+__all__ = ["CartPolePy", "AcrobotPy", "MountainCarPy", "PendulumPy",
+           "MultitaskPy", "PongPy", "BreakoutPy", "BASELINES"]

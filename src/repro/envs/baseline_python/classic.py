@@ -72,8 +72,9 @@ class CartPolePy(_BaselineEnv):
         self.theta += 0.02 * self.theta_dot
         self.theta_dot += 0.02 * thetaacc
         self.steps += 1
-        done = abs(self.x) > 2.4 or abs(self.theta) > 0.2095 or self.steps >= 500
-        return self._obs(), 1.0, done, {}
+        terminal = abs(self.x) > 2.4 or abs(self.theta) > 0.2095
+        truncated = not terminal and self.steps >= 500
+        return self._obs(), 1.0, terminal or truncated, {"truncated": truncated}
 
     def scene(self):
         cx = 0.5 + self.x / 4.8 * 0.8
@@ -104,8 +105,10 @@ class MountainCarPy(_BaselineEnv):
         if self.position <= -1.2 and self.velocity < 0:
             self.velocity = 0.0
         self.steps += 1
-        done = (self.position >= 0.5 and self.velocity >= 0.0) or self.steps >= 200
-        return [self.position, self.velocity], -1.0, done, {}
+        terminal = self.position >= 0.5 and self.velocity >= 0.0
+        truncated = not terminal and self.steps >= 200
+        return [self.position, self.velocity], -1.0, terminal or truncated, \
+            {"truncated": truncated}
 
     def scene(self):
         def to_xy(p):
@@ -166,8 +169,9 @@ class AcrobotPy(_BaselineEnv):
         self.s = s
         self.steps += 1
         terminal = -math.cos(s[0]) - math.cos(s[1] + s[0]) > 1.0
-        done = terminal or self.steps >= 500
-        return self._obs(), (0.0 if terminal else -1.0), done, {}
+        truncated = not terminal and self.steps >= 500
+        return self._obs(), (0.0 if terminal else -1.0), terminal or truncated, \
+            {"truncated": truncated}
 
     def scene(self):
         t1, t2 = self.s[0], self.s[1]
@@ -205,7 +209,8 @@ class PendulumPy(_BaselineEnv):
         self.theta = th + newthdot * 0.05
         self.theta_dot = newthdot
         self.steps += 1
-        return self._obs(), -costs, self.steps >= 200, {}
+        truncated = self.steps >= 200  # pendulum never self-terminates
+        return self._obs(), -costs, truncated, {"truncated": truncated}
 
     def scene(self):
         ox, oy = 0.5, 0.5

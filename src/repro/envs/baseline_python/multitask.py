@@ -39,9 +39,10 @@ class MultitaskPy(_BaselineEnv):
             self.obs_lane = self._rng.randrange(3)
             self.obs_y = 0.0
         self.steps += 1
-        done = catch_fail or dodge_fail or self.steps >= 1000
-        reward = -10.0 if (catch_fail or dodge_fail) else 1.0
-        return self._obs(), reward, done, {}
+        terminal = catch_fail or dodge_fail
+        truncated = not terminal and self.steps >= 1000
+        reward = -10.0 if terminal else 1.0
+        return self._obs(), reward, terminal or truncated, {"truncated": truncated}
 
     def scene(self):
         px = 0.05 + self.paddle_x * 0.40

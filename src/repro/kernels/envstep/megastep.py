@@ -39,33 +39,39 @@ def fused_transition(step_rows: Callable, rows: jax.Array, act: jax.Array,
     `AutoReset(TimeLimit(env)).step` with the fresh reset state/obs already
     materialised. Shared by the Pallas kernel and the jnp reference (ref.py).
 
-    Returns (new_rows, obs, terminal_obs, reward, done) — `terminal_obs` is
-    the pre-reset observation AutoReset surfaces in `info["terminal_obs"]`.
+    Returns (new_rows, obs, terminal_obs, reward, done, truncated) —
+    `terminal_obs` is the pre-reset observation AutoReset surfaces in
+    `info["terminal_obs"]`; `truncated` is TimeLimit's distinct cut signal
+    (1.0 only on a time-limit cut of a non-terminal state, all-zero when
+    there is no time limit) surfaced in `info["truncated"]`.
     """
     stepped, obs, reward, done = step_rows(rows[:s_env], act)
+    trunc = jnp.zeros_like(done)
     if max_steps is not None:
         tcnt = rows[s_env:s_env + 1] + 1.0
+        trunc = (tcnt >= float(max_steps)).astype(jnp.float32) * (1.0 - done)
         done = jnp.maximum(done, (tcnt >= float(max_steps)).astype(jnp.float32))
         stepped = jnp.concatenate([stepped, tcnt], axis=0)
     new_rows = jnp.where(done > 0.0, fresh, stepped)
     obs_out = jnp.where(done > 0.0, fresh_obs, obs)
-    return new_rows, obs_out, obs, reward, done
+    return new_rows, obs_out, obs, reward, done, trunc
 
 
 def _megastep_kernel(state_ref, act_ref, fresh_ref, fobs_ref,
                      out_state_ref, obs_ref, tobs_ref, rew_ref, done_ref,
-                     *, step_rows: Callable, k: int, s_env: int,
+                     trunc_ref, *, step_rows: Callable, k: int, s_env: int,
                      max_steps: Optional[int]):
     def body(t, rows):
         act = act_ref[pl.ds(t, 1), :]                    # (1, BB)
         fresh = fresh_ref[pl.ds(t, 1), :, :][0]          # (S', BB)
         fobs = fobs_ref[pl.ds(t, 1), :, :][0]            # (O, BB)
-        new_rows, obs_out, tobs, reward, done = fused_transition(
+        new_rows, obs_out, tobs, reward, done, trunc = fused_transition(
             step_rows, rows, act, fresh, fobs, s_env, max_steps)
         obs_ref[pl.ds(t, 1), :, :] = obs_out[None]
         tobs_ref[pl.ds(t, 1), :, :] = tobs[None]
         rew_ref[pl.ds(t, 1), :] = reward
         done_ref[pl.ds(t, 1), :] = done
+        trunc_ref[pl.ds(t, 1), :] = trunc
         return new_rows
 
     out_state_ref[...] = jax.lax.fori_loop(0, k, body, state_ref[...])
@@ -81,7 +87,8 @@ def megastep_pallas(step_rows: Callable, state: jax.Array, actions: jax.Array,
     auto-reset states; fresh_obs (K, O, B) f32. The batch is padded to the
     `batch_block` lane boundary (zero lanes compute inert garbage that is
     sliced off). Returns (new_state (S', B), obs (K, O, B),
-    terminal_obs (K, O, B), reward (K, B), done (K, B)) — all f32.
+    terminal_obs (K, O, B), reward (K, B), done (K, B),
+    truncated (K, B)) — all f32.
     """
     sp, b = state.shape
     k = actions.shape[0]
@@ -111,11 +118,13 @@ def megastep_pallas(step_rows: Callable, state: jax.Array, actions: jax.Array,
             pl.BlockSpec((k, o, bb), lambda i: (0, 0, i)),
             pl.BlockSpec((k, bb), lambda i: (0, i)),
             pl.BlockSpec((k, bb), lambda i: (0, i)),
+            pl.BlockSpec((k, bb), lambda i: (0, i)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((sp, bp), jnp.float32),
             jax.ShapeDtypeStruct((k, o, bp), jnp.float32),
             jax.ShapeDtypeStruct((k, o, bp), jnp.float32),
+            jax.ShapeDtypeStruct((k, bp), jnp.float32),
             jax.ShapeDtypeStruct((k, bp), jnp.float32),
             jax.ShapeDtypeStruct((k, bp), jnp.float32),
         ],

@@ -10,10 +10,18 @@ it, precomputes the auto-reset key chain and fresh reset states with the
 identical `jax.random` call sequence `AutoReset.step` makes per step (so the
 threefry stream is bit-exact against the vmap path), flattens the state to
 rows, launches the kernel, and rebuilds the state pytree.
+
+Pixel stacks (`FrameStack(ObsToPixels(core))` / `ObsToPixels(core)`, arcade
+suite) fuse too, when the core spec's obs rows are its state rows
+(`FusedSpec.obs_is_state`): the kernel advances the row-major game logic for
+the whole K-step chunk, then the per-step frames are rasterised *outside*
+the fused body — one batched `kernels.raster` call over all K·B scenes per
+chunk — and the frame-stack ring is rebuilt with a cheap select scan.
+Everything stays on device; rendering work matches the vmap path exactly
+(one stepped + one fresh frame per env per step).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -54,16 +62,69 @@ def env_megastep(step_rows, state, actions, fresh, fresh_obs, *,
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def _peel(env):
+    """Split a pixel wrapper stack from its row-fusable core.
+
+    Returns (core_env, num_stack, pixels): `core_env` is the
+    `TimeLimit(base)` / bare-base stack `lookup()` understands, `num_stack`
+    the FrameStack depth (None if absent), `pixels` whether an ObsToPixels
+    sits over the core. (None, None, False) marks an unfusable stack shape.
+    """
+    from repro.core.wrappers import FrameStack, ObsToPixels
+
+    num_stack = None
+    if isinstance(env, FrameStack):
+        num_stack = env.num_frames
+        env = env.env
+    if isinstance(env, ObsToPixels):
+        return env.env, num_stack, True
+    if num_stack is not None:  # FrameStack over non-pixel obs: not modelled
+        return None, None, False
+    return env, None, False
+
+
+def _pixel_fusable(spec, core) -> bool:
+    return bool(spec.obs_is_state) and hasattr(core.unwrapped, "scene")
+
+
 def supports(env) -> bool:
-    """True if `env` (base or TimeLimit(base)) has a fused megastep spec."""
-    return lookup(env) is not None
+    """True if `env` (base, TimeLimit(base), or a pixel wrapper stack over
+    them) has a fused megastep execution path."""
+    core, _, pixels = _peel(env)
+    if core is None:
+        return False
+    found = lookup(core)
+    if found is None:
+        return False
+    return _pixel_fusable(found[0], core) if pixels else True
+
+
+def _render_obs_rows(core, spec, obs_rows, backend):
+    """(K, O, B) obs rows -> (K, B, H, W) frames, one batched raster call.
+
+    Valid because `spec.obs_is_state`: obs rows ARE state rows, so the
+    capsule scene of every step is reconstructable on device from the
+    kernel's per-step obs output — no per-step render inside the fused body.
+    """
+    from repro.kernels.raster import rasterize
+
+    base = core.unwrapped
+    k, _, b = obs_rows.shape
+    states = jax.vmap(spec.unflatten)(obs_rows)
+    segs, intens = jax.vmap(jax.vmap(base.scene))(states)
+    h, w = base.frame_shape
+    frames = rasterize(segs.reshape((k * b,) + segs.shape[2:]),
+                       intens.reshape(k * b, -1), h, w, backend=backend)
+    return frames.reshape(k, b, h, w)
 
 
 def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
                *, backend: str = "auto", batch_block: int = 128):
     """Advance a batched `AutoReset(env)` state by `num_steps` fused steps.
 
-    env     : the single-env stack the pool holds (`TimeLimit(base)` or base).
+    env     : the single-env stack the pool holds — `TimeLimit(base)` / base,
+              optionally under `ObsToPixels` / `FrameStack(ObsToPixels(...))`
+              (the arcade pixel pipeline).
     state   : `AutoResetState` with batched (B, ...) leaves — exactly the
               env_state `Vec(AutoReset(env))` carries.
     actions : (K, B) (discrete) or (K, B, 1) (continuous) action block.
@@ -74,17 +135,22 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
 
     Returns `(new_state, ts)` where `ts` is a `Timestep` whose obs/reward/
     done/info leaves carry a leading (K, ...) step axis — the same stack
-    `lax.scan` of `Vec(AutoReset(env)).step` would produce.
+    `lax.scan` of `Vec(AutoReset(env)).step` would produce. `info` carries
+    `terminal_obs` (pre-reset obs) and, when the stack has a TimeLimit,
+    `truncated` (time-limit cut of a non-terminal state).
     """
     from repro.core.env import Timestep
-    from repro.core.wrappers import AutoResetState, TimeLimitState
+    from repro.core.wrappers import (AutoResetState, FrameStackState,
+                                     TimeLimitState)
 
-    found = lookup(env)
-    if found is None:
+    core, num_stack, pixels = _peel(env)
+    found = lookup(core) if core is not None else None
+    if found is None or (pixels and not _pixel_fusable(found[0], core)):
         raise NotImplementedError(
             f"no fused megastep spec for {type(env.unwrapped).__name__}; "
-            "supported: CartPole, MountainCar, Pendulum, Acrobot, LightsOut "
-            "(bare or under a single TimeLimit)")
+            "supported: CartPole, MountainCar, Pendulum, Acrobot, LightsOut, "
+            "Pong, Breakout (bare or under a single TimeLimit, arcade also "
+            "under ObsToPixels / FrameStack(ObsToPixels))")
     spec, max_steps = found
 
     acts = jnp.asarray(actions)
@@ -99,9 +165,13 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
     # Auto-reset key chain + fresh reset states, OUTSIDE the kernel: the same
     # per-step `split(state.key)` + `env.reset(reset_key)` AutoReset.step
     # performs, so the threefry stream matches the vmap path bit-for-bit.
+    # Pixel wrappers pass the reset key through to the core untouched, so
+    # resetting `core` here sees the exact stream the full-stack reset would;
+    # the fresh *frames* are re-rendered from the fresh core obs rows below
+    # instead of being materialised per stack slot.
     def reset_body(ks, _):
         pair = jax.vmap(jax.random.split)(ks)          # (B, 2, 2)
-        fs, fo = jax.vmap(env.reset)(pair[:, 1])
+        fs, fo = jax.vmap(core.reset)(pair[:, 1])
         return pair[:, 0], (fs, fo)
 
     final_keys, (fresh_states, fresh_obs) = jax.lax.scan(
@@ -114,11 +184,17 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
             [spec.flatten(wrapped.inner),
              wrapped.t.astype(jnp.float32)[..., None, :]], axis=-2)
 
-    rows = to_rows(state.inner)                        # (S', B)
+    core_state = state.inner
+    frames0 = None
+    if num_stack is not None:
+        frames0 = core_state.frames                    # (B, N, H, W)
+        core_state = core_state.inner
+
+    rows = to_rows(core_state)                         # (S', B)
     fresh_rows = to_rows(fresh_states)                 # (K, S', B)
     fobs_rows = jnp.swapaxes(fresh_obs, -1, -2)        # (K, O, B)
 
-    new_rows, obs, tobs, reward, done = env_megastep(
+    new_rows, obs, tobs, reward, done, trunc = env_megastep(
         spec.step_rows, rows, acts.astype(jnp.float32), fresh_rows, fobs_rows,
         max_steps=max_steps, backend=backend, batch_block=batch_block)
 
@@ -126,9 +202,42 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
                            else new_rows[:spec.state_size])
     if max_steps is not None:
         inner = TimeLimitState(inner, new_rows[spec.state_size].astype(jnp.int32))
-    new_state = AutoResetState(inner, final_keys)
-    obs = jnp.swapaxes(obs, -1, -2)                    # (K, B, O)
-    return new_state, Timestep(
-        state=new_state, obs=obs, reward=reward,
-        done=done.astype(bool),
-        info={"terminal_obs": jnp.swapaxes(tobs, -1, -2)})
+    done_b = done.astype(bool)
+    info = {}
+    if max_steps is not None:
+        info["truncated"] = trunc.astype(bool)
+
+    if not pixels:
+        new_state = AutoResetState(inner, final_keys)
+        info["terminal_obs"] = jnp.swapaxes(tobs, -1, -2)
+        return new_state, Timestep(
+            state=new_state, obs=jnp.swapaxes(obs, -1, -2), reward=reward,
+            done=done_b, info=info)
+
+    # Pixel pipeline: rasterise the chunk's stepped (pre-reset) and fresh
+    # frames in two batched on-device calls, then apply the frame-stack ring
+    # and auto-reset selection — the same per-step render count as the vmap
+    # path, minus all its per-step dispatch.
+    pre = _render_obs_rows(core, spec, tobs, backend)        # (K, B, H, W)
+    fresh_px = _render_obs_rows(core, spec, fobs_rows, backend)
+    if num_stack is None:
+        obs_px = jnp.where(done_b[..., None, None], fresh_px, pre)
+        tobs_px = pre
+        new_inner = inner
+    else:
+        def stack_body(frames, xs):
+            pre_f, fresh_f, d = xs
+            pre_stack = jnp.concatenate([frames[:, 1:], pre_f[:, None]],
+                                        axis=1)
+            post = jnp.where(d[:, None, None, None],
+                             jnp.broadcast_to(fresh_f[:, None],
+                                              pre_stack.shape), pre_stack)
+            return post, (post, pre_stack)
+
+        frames_t, (obs_px, tobs_px) = jax.lax.scan(
+            stack_body, frames0, (pre, fresh_px, done_b))
+        new_inner = FrameStackState(inner, frames_t)
+    new_state = AutoResetState(new_inner, final_keys)
+    info["terminal_obs"] = tobs_px
+    return new_state, Timestep(state=new_state, obs=obs_px, reward=reward,
+                               done=done_b, info=info)

@@ -20,17 +20,17 @@ def megastep_ref(step_rows: Callable, state: jax.Array, actions: jax.Array,
                  max_steps: Optional[int] = None):
     """Same contract as megastep_pallas: returns
     (new_state (S', B), obs (K, O, B), terminal_obs (K, O, B),
-    reward (K, B), done (K, B)), all f32."""
+    reward (K, B), done (K, B), truncated (K, B)), all f32."""
     s_env = state.shape[0] - (1 if max_steps is not None else 0)
 
     def body(rows, xs):
         act, fresh_t, fobs_t = xs
-        new_rows, obs_out, tobs, reward, done = fused_transition(
+        new_rows, obs_out, tobs, reward, done, trunc = fused_transition(
             step_rows, rows, act[None], fresh_t, fobs_t, s_env, max_steps)
-        return new_rows, (obs_out, tobs, reward[0], done[0])
+        return new_rows, (obs_out, tobs, reward[0], done[0], trunc[0])
 
-    new_state, (obs, tobs, rew, done) = jax.lax.scan(
+    new_state, (obs, tobs, rew, done, trunc) = jax.lax.scan(
         body, state.astype(jnp.float32),
         (actions.astype(jnp.float32), fresh.astype(jnp.float32),
          fresh_obs.astype(jnp.float32)))
-    return new_state, obs, tobs, rew, done
+    return new_state, obs, tobs, rew, done, trunc

@@ -37,6 +37,12 @@ class FusedSpec(NamedTuple):
     # step_rows: (rows (S, B), action (1, B) f32)
     #   -> (new_rows (S, B), obs (O, B), reward (1, B), done (1, B) f32)
     step_rows: Callable[[jax.Array, jax.Array], Tuple[jax.Array, ...]]
+    # obs rows == state rows (obs = flattened base state). When True and the
+    # base env has a capsule `scene()`, pixel wrapper stacks
+    # (ObsToPixels / FrameStack) can run fused too: the kernel steps the
+    # row-major game logic, and frames are rasterised per-chunk from the
+    # per-step obs rows outside the fused body (ops.fused_step).
+    obs_is_state: bool = False
 
 
 def _row(x: jax.Array) -> jax.Array:
@@ -81,7 +87,8 @@ def _cartpole_spec(env) -> FusedSpec:
                 | (jnp.abs(nth) > THETA_THRESHOLD)).astype(jnp.float32)
         return new, new, jnp.ones_like(done), done
 
-    return FusedSpec("CartPole", 4, 4, flatten, unflatten, step_rows)
+    return FusedSpec("CartPole", 4, 4, flatten, unflatten, step_rows,
+                     obs_is_state=True)
 
 
 # -- MountainCar -------------------------------------------------------------
@@ -107,7 +114,8 @@ def _mountain_car_spec(env) -> FusedSpec:
         done = ((npos >= GOAL_POS) & (nv >= GOAL_VEL)).astype(jnp.float32)
         return new, new, -jnp.ones_like(done), done
 
-    return FusedSpec("MountainCar", 2, 2, flatten, unflatten, step_rows)
+    return FusedSpec("MountainCar", 2, 2, flatten, unflatten, step_rows,
+                     obs_is_state=True)
 
 
 # -- Pendulum ----------------------------------------------------------------
@@ -232,9 +240,125 @@ def _lightsout_spec(env) -> FusedSpec:
     return FusedSpec("LightsOut", m + 1, m, flatten, unflatten, step_rows)
 
 
+# -- Pong --------------------------------------------------------------------
+
+def _pong_spec(env) -> FusedSpec:
+    from repro.envs.arcade.pong import (
+        MAX_VY, OPP_SPEED, OPP_X, PADDLE_HALF, PADDLE_SPEED, PLAYER_X,
+        PongState, SPIN)
+
+    def flatten(s: PongState) -> jax.Array:
+        return _stack_rows([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy,
+                            s.player_y, s.opp_y])
+
+    def unflatten(rows: jax.Array) -> PongState:
+        return PongState(rows[0], rows[1], rows[2], rows[3], rows[4], rows[5])
+
+    def step_rows(rows, act):
+        x, y = rows[0:1], rows[1:2]
+        vx, vy = rows[2:3], rows[3:4]
+        py, oy = rows[4:5], rows[5:6]
+        move = act - 1.0
+        py = jnp.clip(py + move * PADDLE_SPEED, PADDLE_HALF, 1.0 - PADDLE_HALF)
+        oy = oy + jnp.clip(y - oy, -OPP_SPEED, OPP_SPEED)
+        oy = jnp.clip(oy, PADDLE_HALF, 1.0 - PADDLE_HALF)
+        nx = x + vx
+        ny = y + vy
+        vy = jnp.where((ny < 0.0) | (ny > 1.0), -vy, vy)
+        ny = jnp.where(ny < 0.0, -ny, ny)
+        ny = jnp.where(ny > 1.0, 2.0 - ny, ny)
+        hit_p = ((x < PLAYER_X) & (nx >= PLAYER_X)
+                 & (jnp.abs(ny - py) <= PADDLE_HALF))
+        vy = jnp.where(hit_p, jnp.clip(vy + (ny - py) * SPIN,
+                                       -MAX_VY, MAX_VY), vy)
+        vx = jnp.where(hit_p, -vx, vx)
+        nx = jnp.where(hit_p, 2.0 * PLAYER_X - nx, nx)
+        hit_o = ((x > OPP_X) & (nx <= OPP_X)
+                 & (jnp.abs(ny - oy) <= PADDLE_HALF))
+        vy = jnp.where(hit_o, jnp.clip(vy + (ny - oy) * SPIN,
+                                       -MAX_VY, MAX_VY), vy)
+        vx = jnp.where(hit_o, -vx, vx)
+        nx = jnp.where(hit_o, 2.0 * OPP_X - nx, nx)
+        new = jnp.concatenate([nx, ny, vx, vy, py, oy], axis=0)
+        reward = (nx < 0.0).astype(jnp.float32) - (nx > 1.0).astype(jnp.float32)
+        done = ((nx < 0.0) | (nx > 1.0)).astype(jnp.float32)
+        return new, new, reward, done
+
+    return FusedSpec("Pong", 6, 6, flatten, unflatten, step_rows,
+                     obs_is_state=True)
+
+
+# -- Breakout ----------------------------------------------------------------
+
+def _breakout_spec(env) -> FusedSpec:
+    from repro.envs.arcade.breakout import (
+        BRICK_COLS, BRICK_H, BRICK_ROWS, BRICK_TOP, BreakoutState,
+        CLEAR_BONUS, MAX_VX, PADDLE_HALF, PADDLE_SPEED, PADDLE_Y, SPIN)
+
+    m = BRICK_ROWS * BRICK_COLS
+
+    def flatten(s: BreakoutState) -> jax.Array:
+        board = s.bricks.reshape(s.bricks.shape[:-2] + (m,))
+        board_rows = jnp.swapaxes(board, -1, -2).astype(jnp.float32)
+        return jnp.concatenate(
+            [_stack_rows([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy,
+                          s.paddle_x]), board_rows], axis=-2)
+
+    def unflatten(rows: jax.Array) -> BreakoutState:
+        board = jnp.swapaxes(rows[5:5 + m], -1, -2)
+        b = board.shape[0]
+        return BreakoutState(
+            rows[0], rows[1], rows[2], rows[3], rows[4],
+            board.reshape(b, BRICK_ROWS, BRICK_COLS).astype(jnp.int32))
+
+    def step_rows(rows, act):
+        x, y = rows[0:1], rows[1:2]
+        vx, vy = rows[2:3], rows[3:4]
+        px = rows[4:5]
+        board = rows[5:5 + m]
+        move = act - 1.0
+        px = jnp.clip(px + move * PADDLE_SPEED, PADDLE_HALF, 1.0 - PADDLE_HALF)
+        nx = x + vx
+        ny = y + vy
+        vx = jnp.where((nx < 0.0) | (nx > 1.0), -vx, vx)
+        nx = jnp.where(nx < 0.0, -nx, nx)
+        nx = jnp.where(nx > 1.0, 2.0 - nx, nx)
+        vy = jnp.where(ny < 0.0, -vy, vy)
+        ny = jnp.where(ny < 0.0, -ny, ny)
+        hit_pad = ((y < PADDLE_Y) & (ny >= PADDLE_Y)
+                   & (jnp.abs(nx - px) <= PADDLE_HALF))
+        vx = jnp.where(hit_pad, jnp.clip(vx + (nx - px) * SPIN,
+                                         -MAX_VX, MAX_VX), vx)
+        vy = jnp.where(hit_pad, -vy, vy)
+        ny = jnp.where(hit_pad, 2.0 * PADDLE_Y - ny, ny)
+        # Per-cell (row, col) planes; 2-D iota is TPU-native (LightsOut idiom).
+        idx = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+        rr = (idx // BRICK_COLS).astype(jnp.float32)
+        cc = (idx % BRICK_COLS).astype(jnp.float32)
+        cell_r = jnp.floor((ny - BRICK_TOP) / BRICK_H)
+        cell_c = jnp.floor(nx * BRICK_COLS)
+        in_region = ((ny >= BRICK_TOP)
+                     & (ny < BRICK_TOP + BRICK_ROWS * BRICK_H))
+        mask = ((rr == cell_r) & (cc == cell_c)).astype(jnp.float32) \
+            * in_region.astype(jnp.float32) * board
+        broke = jnp.sum(mask, axis=0, keepdims=True)
+        new_board = board - mask
+        vy = jnp.where(broke > 0.0, -vy, vy)
+        cleared = jnp.sum(new_board, axis=0, keepdims=True) == 0.0
+        lost = ny > 1.0
+        done = (cleared | lost).astype(jnp.float32)
+        reward = broke + jnp.where(cleared, CLEAR_BONUS, 0.0)
+        new = jnp.concatenate([nx, ny, vx, vy, px, new_board], axis=0)
+        return new, new, reward, done
+
+    return FusedSpec("Breakout", 5 + m, 5 + m, flatten, unflatten, step_rows,
+                     obs_is_state=True)
+
+
 # -- registry ----------------------------------------------------------------
 
 def _factories():
+    from repro.envs.arcade import Breakout, Pong
     from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
     from repro.envs.puzzle import LightsOut
 
@@ -244,6 +368,8 @@ def _factories():
         Pendulum: _pendulum_spec,
         Acrobot: _acrobot_spec,
         LightsOut: _lightsout_spec,
+        Pong: _pong_spec,
+        Breakout: _breakout_spec,
     }
 
 

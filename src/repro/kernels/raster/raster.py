@@ -66,22 +66,25 @@ def rasterize_pallas(
     """(B, S, 5) segments + (B, S) intensities -> (B, H, W) framebuffers."""
     b, s, _ = segs.shape
     bb = min(batch_block, b)
-    if b % bb:
-        raise ValueError(f"batch {b} not divisible by batch_block {bb}")
+    bp = (b + bb - 1) // bb * bb  # pad the batch to the block boundary
+    if bp != b:
+        # Zero-radius/zero-intensity pad scenes are inert; sliced off below.
+        segs = jnp.pad(segs, ((0, bp - b), (0, 0), (0, 0)))
+        intens = jnp.pad(intens, ((0, bp - b), (0, 0)))
     wp = (w + 127) // 128 * 128  # lane-align the minor dim
 
     # Pad the segment feature dim to 8 so the VMEM tile is sublane-friendly.
-    segs8 = jnp.concatenate([segs, jnp.zeros((b, s, 3), segs.dtype)], axis=-1)
+    segs8 = jnp.concatenate([segs, jnp.zeros((bp, s, 3), segs.dtype)], axis=-1)
 
     out = pl.pallas_call(
         functools.partial(_raster_kernel, h=h, w=w, s=s, bb=bb),
-        grid=(b // bb,),
+        grid=(bp // bb,),
         in_specs=[
             pl.BlockSpec((bb, s, 8), lambda i: (i, 0, 0)),
             pl.BlockSpec((bb, s), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bb, h, wp), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, wp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bp, h, wp), jnp.float32),
         interpret=interpret,
     )(segs8.astype(jnp.float32), intens.astype(jnp.float32))
-    return out[:, :, :w]
+    return out[:b, :, :w]

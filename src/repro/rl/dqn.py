@@ -102,11 +102,20 @@ def _epsilon(cfg: DQNConfig, step):
 
 
 def _td_loss(apply_fn, params, target, batch, discount):
-    obs, action, reward, next_obs, done = batch
+    """`terminal` is the stored env-termination flag — NOT folded `done`.
+
+    A time-limit truncation is not a terminal state, so its transition is
+    stored with terminal=0 and the target keeps bootstrapping from
+    q(next_obs) (= q(terminal_obs), the pre-reset observation). Folding
+    truncation into this flag zeroes the bootstrap at every time-limit cut
+    and biases the values of any env that mostly ends by limit
+    (Pendulum-v1, MountainCar-v0).
+    """
+    obs, action, reward, next_obs, terminal = batch
     q = apply_fn(params, obs)
     q_sa = jnp.take_along_axis(q, action[:, None], axis=-1)[:, 0]
     q_next = jnp.max(apply_fn(target, next_obs), axis=-1)
-    tgt = reward + discount * (1.0 - done) * jax.lax.stop_gradient(q_next)
+    tgt = reward + discount * (1.0 - terminal) * jax.lax.stop_gradient(q_next)
     return jnp.mean(huber_loss(q_sa, tgt))
 
 
@@ -141,7 +150,12 @@ def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
 
         new_pool, ts = pool.step(state.pool, action, k_env)
         terminal_obs = ts.info.get("terminal_obs", ts.obs)
-        replay = replay_add_batch(state.replay, obs, action, ts.reward, terminal_obs, ts.done)
+        # Store the *termination* flag, not the folded done: truncated
+        # episodes (info["truncated"], core/wrappers.TimeLimit) still
+        # bootstrap through terminal_obs in _td_loss.
+        truncated = ts.info.get("truncated", jnp.zeros_like(ts.done))
+        terminal = ts.done & ~truncated
+        replay = replay_add_batch(state.replay, obs, action, ts.reward, terminal_obs, terminal)
 
         # learn (skipped while the buffer warms up)
         batch = replay_sample(replay, k_sample, cfg.batch_size)
@@ -212,11 +226,15 @@ def train_host(make_env_host, env_spec_env: Env, cfg: DQNConfig, steps: int, key
             action = host_env.action_space_sample()
         else:
             action = int(act_jit(params, jnp.asarray(obs)))
-        next_obs, reward, done, _ = host_env.step(action)
+        next_obs, reward, done, info = host_env.step(action)
         next_obs = np.asarray(next_obs, np.float32)
+        # Same termination/truncation split as the compiled path: the stored
+        # flag blocks bootstrapping only at env-terminal states, so both
+        # execution modes learn from identical TD targets.
+        terminal = done and not info.get("truncated", False)
         replay = add(replay, jnp.asarray(obs)[None], jnp.asarray([action], jnp.int32),
                      jnp.asarray([reward], jnp.float32), jnp.asarray(next_obs)[None],
-                     jnp.asarray([done], jnp.float32))
+                     jnp.asarray([terminal], jnp.float32))
         ep_ret += reward
         if done:
             returns.append(ep_ret)

@@ -13,6 +13,11 @@ Activation = {
     "gelu": jax.nn.gelu,
 }
 
+CONV_SPECS = [  # (kernel_h, kernel_w, stride) per conv layer
+    (8, 8, 4),
+    (4, 4, 2),
+]
+
 
 def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
     params = []
@@ -34,22 +39,35 @@ def mlp_apply(params, x, activation: str = "elu"):
     return x
 
 
-def cnn_init(key, in_hw: Tuple[int, int], channels=(16, 32), dense=256, out=2, dtype=jnp.float32):
-    """Nature-DQN-lite conv net for (H, W) grayscale frames."""
-    h, w = in_hw
-    specs = [  # (kh, kw, stride)
-        (8, 8, 4),
-        (4, 4, 2),
-    ]
+def cnn_init(key, in_shape: Tuple[int, ...], channels=(16, 32), dense=256, out=2, dtype=jnp.float32):
+    """Nature-DQN-lite conv net.
+
+    in_shape: (H, W) single grayscale frames, or (N, H, W) for stacked
+    frames (core.wrappers.FrameStack) — the stack axis becomes the N input
+    channels, the classic Atari-DQN pipeline.
+    """
+    if len(in_shape) == 2:
+        cin, (h, w) = 1, in_shape
+    elif len(in_shape) == 3:
+        cin, h, w = in_shape
+        if cin == 1:
+            # cnn_apply infers the layout from the conv fan-in, and cin == 1
+            # is indistinguishable from unstacked (H, W) frames at apply
+            # time — a 1-frame stack would silently fold into the batch.
+            raise ValueError("1-frame stacks are ambiguous: use in_shape="
+                             "(H, W) (drop the FrameStack) or >= 2 frames")
+    else:
+        raise ValueError(f"cnn obs must be (H, W) or (N, H, W); got {in_shape}")
     params = {"convs": [], "dense": None, "out": None}
-    cin = 1
-    for (kh, kw, s), cout in zip(specs, channels):
+    for (kh, kw, s), cout in zip(CONV_SPECS, channels):
         key, sub = jax.random.split(key)
         fan_in = kh * kw * cin
+        # Strides stay in the static CONV_SPECS table, NOT in the params
+        # pytree: a non-array leaf would be traced when the params ride a
+        # scan carry (train_compiled) and conv strides must be static.
         params["convs"].append({
             "w": jax.random.normal(sub, (kh, kw, cin, cout), dtype) * jnp.sqrt(2.0 / fan_in),
             "b": jnp.zeros((cout,), dtype),
-            "stride": s,
         })
         h = (h - kh) // s + 1
         w = (w - kw) // s + 1
@@ -68,13 +86,24 @@ def cnn_init(key, in_hw: Tuple[int, int], channels=(16, 32), dense=256, out=2, d
 
 
 def cnn_apply(params, x, activation: str = "elu"):
-    """x: (..., H, W) grayscale in [0,1] -> (..., out)."""
+    """x: (..., H, W) grayscale or (..., N, H, W) stacked frames -> (..., out).
+
+    The input layout is recovered from the first conv's fan-in: cin == 1
+    means plain (H, W) frames, cin > 1 means an N-frame stack whose leading
+    axis maps to input channels.
+    """
     act = Activation[activation]
-    batch_shape = x.shape[:-2]
-    x = x.reshape((-1,) + x.shape[-2:])[..., None]  # (B, H, W, 1)
-    for conv in params["convs"]:
+    cin = params["convs"][0]["w"].shape[2]
+    nd = 2 if cin == 1 else 3
+    batch_shape = x.shape[:-nd]
+    if cin == 1:
+        x = x.reshape((-1,) + x.shape[-2:])[..., None]        # (B, H, W, 1)
+    else:
+        x = x.reshape((-1,) + x.shape[-3:])
+        x = jnp.moveaxis(x, 1, -1)                            # (B, H, W, N)
+    for conv, (_, _, s) in zip(params["convs"], CONV_SPECS):
         x = jax.lax.conv_general_dilated(
-            x, conv["w"], (conv["stride"], conv["stride"]), "VALID",
+            x, conv["w"], (s, s), "VALID",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         ) + conv["b"]
         x = act(x)

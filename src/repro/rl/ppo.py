@@ -113,10 +113,24 @@ def make_update(env: Env, cfg: PPOConfig):
             action = jax.random.categorical(k_act, logits)
             logp = jax.nn.log_softmax(logits)[jnp.arange(cfg.num_envs), action]
             ps, ts = pool.step(ps, action.astype(jnp.int32), k_env)
+            # Bootstrap through time-limit cuts: a truncated step's value
+            # target is r + γ·V(terminal_obs), not r alone — fold the
+            # bootstrap into the stored reward so GAE's (1 - done) masking
+            # still cuts the trace at the episode boundary (the next sample
+            # belongs to a fresh auto-reset episode). The info structure is
+            # static at trace time, so stacks without a TimeLimit skip the
+            # extra value forward pass entirely.
+            if "truncated" in ts.info:
+                trunc = ts.info["truncated"].astype(jnp.float32)
+                term_obs = ts.info.get("terminal_obs", ts.obs)
+                _, v_term = ac_apply(state.params, term_obs, cfg.activation)
+                rew = ts.reward + cfg.discount * trunc * v_term
+            else:
+                rew = ts.reward
             ep_ret = ep_ret + ts.reward
             last_ret = jnp.where(ts.done, ep_ret, last_ret)
             ep_ret = jnp.where(ts.done, 0.0, ep_ret)
-            out = (obs, action, logp, value, ts.reward, ts.done)
+            out = (obs, action, logp, value, rew, ts.done)
             return (ps, key, ep_ret, last_ret), out
 
         carry = (state.pool, state.key, state.ep_return, state.last_return)

@@ -24,6 +24,10 @@ from repro.kernels.envstep import fused_step
 from repro.launch.hlo_analysis import host_transfer_ops
 from repro.pool import EnvPool, ShardedEnvPool, default_pool_mesh, make_pool
 
+# The whole module is the heavy fused/pool sweep — skipped by
+# `make test-fast`, run by tier-1 `make test`.
+pytestmark = pytest.mark.slow
+
 BACKENDS = ("jnp", "pallas_interpret")
 FUSED_IDS = ["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1",
              "LightsOut-v0", "CartPole-raw"]

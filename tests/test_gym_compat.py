@@ -1,0 +1,86 @@
+"""GymCompat shim semantics: reseeding, the 5-tuple API, shim copyability."""
+import copy
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_compat
+from repro.core.gym_compat import GymCompat, _SpaceShim
+from repro.core.wrappers import TimeLimit
+from repro.envs.classic import CartPole, Pendulum
+
+
+def test_seed_mid_episode_forces_reset():
+    """Regression: reseeding used to keep the old `_state`, so the next
+    step() silently continued an episode begun under the previous seed."""
+    e = make_compat("CartPole-v1", seed=3)
+    e.reset()
+    e.step(1)
+    e.seed(7)
+    with pytest.raises(RuntimeError, match="reset"):
+        e.step(1)
+    obs = e.reset()  # fresh episode from the new seed works
+    assert np.isfinite(obs).all()
+
+
+def test_seed_makes_episodes_reproducible():
+    e = make_compat("CartPole-v1", seed=0)
+    e.seed(42)
+    traj1 = [e.reset()] + [e.step(i % 2)[0] for i in range(5)]
+    e.seed(42)
+    traj2 = [e.reset()] + [e.step(i % 2)[0] for i in range(5)]
+    np.testing.assert_array_equal(np.stack(traj1), np.stack(traj2))
+
+
+def test_new_step_api_truncation_five_tuple():
+    e = GymCompat(TimeLimit(Pendulum(), 3), seed=0, new_step_api=True)
+    e.reset()
+    for _ in range(2):
+        obs, rew, terminated, truncated, info = e.step([0.0])
+        assert not terminated and not truncated
+    obs, rew, terminated, truncated, info = e.step([0.0])
+    assert truncated and not terminated  # time-limit cut, not env-terminal
+    assert "truncated" not in info       # mapped into the tuple, not the dict
+
+
+def test_new_step_api_terminal_five_tuple():
+    e = GymCompat(TimeLimit(CartPole(), 500), seed=0, new_step_api=True)
+    e.reset()
+    for _ in range(60):  # constant push falls over well inside the limit
+        obs, rew, terminated, truncated, info = e.step(1)
+        if terminated:
+            break
+    assert terminated and not truncated
+
+
+def test_old_step_api_unchanged():
+    e = make_compat("Pendulum-v1", seed=0)
+    e.reset()
+    out = e.step([0.0])
+    assert len(out) == 4
+    obs, rew, done, info = out
+    assert isinstance(done, bool) and "truncated" not in info
+
+
+def test_space_shim_copy_deepcopy_pickle():
+    """Regression: copy/pickle used to recurse forever — __getattr__
+    dereferenced self._space before __init__ populated it."""
+    e = make_compat("CartPole-v1")
+    for shim in (e.action_space, e.observation_space):
+        for clone in (copy.copy(shim), copy.deepcopy(shim),
+                      pickle.loads(pickle.dumps(shim))):
+            assert isinstance(clone, _SpaceShim)
+            s = clone.sample()
+            assert np.asarray(s).shape == np.asarray(shim.sample()).shape
+    assert e.action_space.n == 2  # attribute passthrough still works
+
+
+def test_space_shim_raises_attribute_error_for_missing():
+    e = make_compat("CartPole-v1")
+    with pytest.raises(AttributeError):
+        e.action_space.definitely_not_an_attribute
+    with pytest.raises(AttributeError):
+        e.action_space.__wrapped__  # dunder probes must not recurse

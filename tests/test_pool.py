@@ -23,6 +23,7 @@ from repro.launch.hlo_analysis import host_transfer_ops
 from repro.pool import EnvPool, HostPool, ShardedEnvPool, default_pool_mesh, make_pool
 
 
+@pytest.mark.slow
 def test_envpool_rollout_matches_runner():
     """The pool's compiled rollout is the runner fast path, bit-exact."""
     env = make("CartPole-v1")
@@ -73,6 +74,7 @@ def test_envpool_autoresets_and_reports_terminal_obs():
     assert np.isfinite(np.asarray(obs)).all()  # kept running past the limit
 
 
+@pytest.mark.slow
 def test_sharded_pool_matches_unsharded_on_one_device_mesh():
     env = make("CartPole-v1")
     key = jax.random.PRNGKey(5)
@@ -118,6 +120,7 @@ print(json.dumps({
 """
 
 
+@pytest.mark.slow
 def test_sharded_pool_spans_devices():
     """On an 8-device mesh the batch is physically distributed."""
     out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],

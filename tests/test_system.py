@@ -87,6 +87,7 @@ def test_policy_rollout_shapes():
     assert traj.done.dtype == jnp.bool_
 
 
+@pytest.mark.slow
 def test_dqn_short_run_improves_over_random():
     from repro.rl.dqn import DQNConfig, train_compiled, greedy_returns
 

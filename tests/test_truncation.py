@@ -1,0 +1,134 @@
+"""Termination/truncation correctness sweep.
+
+The classic conflation bug: folding a time-limit cut into `done` makes
+value-based learners refuse to bootstrap at truncation, biasing targets for
+every env that mostly ends by limit (Pendulum-v1, MountainCar-v0 — every
+episode). The contract under test (docs/pool.md, "The info contract"):
+`done` stays the folded episode boundary, `info["truncated"]` keeps the cut
+distinguishable through every layer (TimeLimit, AutoReset, Vec, both pool
+engines, the fused kernel), and DQN/PPO bootstrap through it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make
+from repro.core.wrappers import AutoReset, TimeLimit, Vec
+from repro.envs.classic import CartPole, MountainCar, Pendulum
+from repro.kernels.envstep import fused_step
+from repro.pool import EnvPool
+
+
+def test_timelimit_sets_truncated_distinct_from_terminal():
+    env = TimeLimit(Pendulum(), 3)  # never self-terminates
+    key = jax.random.PRNGKey(0)
+    state, _ = env.reset(key)
+    for i in range(3):
+        ts = env.step(state, jnp.asarray([0.0]), jax.random.fold_in(key, i))
+        state = ts.state
+    assert bool(ts.done) and bool(ts.info["truncated"])
+
+    # env-terminal at the limit step is TERMINAL, not truncated
+    env = TimeLimit(CartPole(), 1)
+    from repro.core.wrappers import TimeLimitState
+    from repro.envs.classic.cartpole import CartPoleState
+    falling = TimeLimitState(
+        CartPoleState(*(jnp.asarray(v) for v in (2.39, 5.0, 0.0, 0.0))),
+        jnp.asarray(0, jnp.int32))
+    ts = env.step(falling, jnp.asarray(1), key)
+    assert bool(ts.done) and not bool(ts.info["truncated"])
+
+
+def test_autoreset_and_vec_propagate_truncated():
+    env = Vec(AutoReset(TimeLimit(Pendulum(), 4)), 3)
+    key = jax.random.PRNGKey(1)
+    state, _ = env.reset(key)
+    flags = []
+    for i in range(9):
+        ts = env.step(state, jnp.zeros((3, 1)), jax.random.fold_in(key, i))
+        state = ts.state
+        assert "truncated" in ts.info and ts.info["truncated"].shape == (3,)
+        flags.append(np.asarray(ts.info["truncated"]))
+    # truncates at steps 4 and 8 for every env (autoreset resets the counter)
+    assert flags[3].all() and flags[7].all()
+    assert not np.stack(flags[:3]).any() and not np.stack(flags[4:7]).any()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+def test_fused_truncated_matches_vmap(backend):
+    env = TimeLimit(MountainCar(), 7)
+    num_envs, k = 5, 20
+    key = jax.random.PRNGKey(2)
+    venv = Vec(AutoReset(env), num_envs)
+    state0, _ = venv.reset(key)
+    state, trunc_ref, done_ref = state0, [], []
+    for t in range(k):
+        ts = venv.step(state, jnp.zeros((num_envs,), jnp.int32),
+                       jax.random.fold_in(key, t))
+        state = ts.state
+        trunc_ref.append(ts.info["truncated"])
+        done_ref.append(ts.done)
+    _, ts_f = fused_step(env, state0, jnp.zeros((k, num_envs), jnp.int32),
+                         backend=backend)
+    np.testing.assert_array_equal(np.asarray(ts_f.info["truncated"]),
+                                  np.asarray(jnp.stack(trunc_ref)))
+    np.testing.assert_array_equal(np.asarray(ts_f.done),
+                                  np.asarray(jnp.stack(done_ref)))
+    assert np.asarray(jnp.stack(trunc_ref)).sum() > 0  # cuts actually happened
+
+
+@pytest.mark.parametrize("backend", ["vmap", "jnp"])
+def test_pool_surfaces_truncated(backend):
+    pool = EnvPool("MountainCar-v0", 4, backend=backend)
+    pool.reset(seed=0)
+    seen = False
+    for i in range(201):
+        _, _, done, info = pool.step(np.ones((4,), np.int32))
+        assert "truncated" in info
+        seen = seen or bool(np.asarray(info["truncated"]).any())
+    assert seen  # MountainCar under a fixed action always times out
+
+
+def test_dqn_stores_truncation_as_nonterminal():
+    """The headline regression: a time-limit cut must be stored with
+    terminal=0 so the TD target `r + γ·(1-terminal)·max q(terminal_obs)`
+    keeps bootstrapping. The old `(1 - done)` target stored the folded done
+    (=1 at the cut) and fails this test."""
+    from repro.rl.dqn import DQNConfig, dqn_init, make_train_step
+
+    env = TimeLimit(MountainCar(), 3)  # truncates every 3 steps, no terminals
+    cfg = DQNConfig(num_envs=2, learn_start=100, memory_size=32)
+    state, apply_fn = dqn_init(env, cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(env, apply_fn, cfg))
+    for _ in range(6):
+        state, _ = step_fn(state, None)
+    stored = np.asarray(state.replay.done[: int(state.replay.size)])
+    assert stored.shape[0] == 12
+    assert stored.sum() == 0.0  # every cut is truncation — never terminal
+
+
+def test_dqn_still_stores_env_terminals():
+    """CartPole failures are env-terminal: the stored flag must stay 1 there
+    (bootstrapping through real terminals would be the opposite bug)."""
+    from repro.rl.dqn import DQNConfig, dqn_init, make_train_step
+
+    env = make("CartPole-v1")
+    cfg = DQNConfig(num_envs=4, learn_start=1000, memory_size=256,
+                    exploration_start=1.0, exploration_final=1.0)  # random
+    state, apply_fn = dqn_init(env, cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(env, apply_fn, cfg))
+    for _ in range(60):
+        state, _ = step_fn(state, None)
+    stored = np.asarray(state.replay.done[: int(state.replay.size)])
+    assert stored.sum() > 0  # random CartPole falls well before 500 steps
+
+
+def test_ppo_trains_through_truncations():
+    from repro.rl.ppo import PPOConfig, train
+
+    env = TimeLimit(MountainCar(), 8)  # truncation-only episode ends
+    cfg = PPOConfig(num_envs=4, rollout_len=20, epochs=2, minibatches=2)
+    _, metrics = train(env, cfg, 2, jax.random.PRNGKey(0))
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    assert np.isfinite(np.asarray(metrics["return"])).all()

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Box, Discrete, FlattenObs, MultiDiscrete, TimeLimit, Vec, make
-from repro.core.wrappers import ObsToPixels
+from repro.core.wrappers import FrameStack, ObsToPixels
 from repro.envs.classic import CartPole, Pendulum
 
 
@@ -67,3 +67,19 @@ def test_obs_to_pixels():
     assert ts.obs.shape == (84, 84)
     # moving cart changes pixels
     assert not np.allclose(np.asarray(obs), np.asarray(ts.obs))
+
+
+def test_frame_stack_ring():
+    env = FrameStack(ObsToPixels(CartPole()), 3)
+    assert env.observation_space.shape == (3, 84, 84)
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    # reset fills the stack with the initial frame
+    np.testing.assert_array_equal(np.asarray(obs[0]), np.asarray(obs[2]))
+    ts = env.step(state, jnp.asarray(1), jax.random.PRNGKey(1))
+    # the previous newest frame shifted one slot toward the past
+    np.testing.assert_array_equal(np.asarray(ts.obs[1]), np.asarray(obs[2]))
+    assert not np.allclose(np.asarray(ts.obs[2]), np.asarray(obs[2]))
+    # step-axis stacking preserves the truncated/done plumbing
+    ts2 = env.step(ts.state, jnp.asarray(0), jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(ts2.obs[0]),
+                                  np.asarray(ts.obs[1]))
