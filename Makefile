@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-conformance bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,6 +12,13 @@ test:
 # for a quick inner-loop signal; `make test` remains the tier-1 gate.
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# Registry-driven conformance: every registered env id × every backend
+# (python baseline / vmap / fused / pool) + the committed golden traces.
+# After an intentional dynamics change, regenerate the goldens with
+#   $(PY) -m pytest tests/test_golden.py --regen-golden
+test-conformance:
+	$(PY) -m pytest -x -q tests/test_conformance.py tests/test_golden.py
 
 # Fast end-to-end benchmark smoke: pool scaling sweep + HLO device-residency
 # check (the fig4 acceptance gate), small step counts — and the JSON perf

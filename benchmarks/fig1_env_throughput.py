@@ -22,6 +22,10 @@ ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
 # Arcade pixel games: every step renders 84×84 observations on device, the
 # paper's software-rendering workload (§II-B) — console mode is render mode.
 ARCADE = ["Pong-v0"]
+# Procedural gridworlds (envs/grid): the level regenerates every episode on
+# the autoreset key chain, so console throughput includes on-device level
+# generation; the interpreted comparator regenerates with python RNG.
+GRID = ["FrozenLake-v0", "CliffWalk-v0", "Snake-v0", "Maze-v0"]
 
 
 def bench_compiled(name: str, steps: int, batch: int, render: bool,
@@ -51,7 +55,7 @@ def bench_python(name: str, steps: int, render: bool, trials: int = 2) -> float:
 
 def run(console_steps: int = 2000, render_steps: int = 200, batch: int = 64) -> Dict:
     rows = {}
-    for name in ENVS + ARCADE:
+    for name in ENVS + ARCADE + GRID:
         # Arcade ids observe rendered frames, so their compiled "console"
         # mode rasterises every step — the interpreted comparator must
         # render too or the ratio measures rendering-vs-nothing.
@@ -86,7 +90,7 @@ def run_backends(steps: int = 2000, batch: int = 64, unroll: int = 32,
     from repro.core.registry import make
 
     rows: Dict[str, Dict] = {}
-    for name in (envs or ENVS + ARCADE):
+    for name in (envs or ENVS + ARCADE + GRID):
         r: Dict = {}
         pixel = len(make(name).observation_space.shape) >= 2
         u = min(unroll, 8) if pixel else unroll

@@ -44,7 +44,13 @@ class Discrete(Space):
 
     def contains(self, x) -> jax.Array:
         x = jnp.asarray(x)
-        return (x >= 0) & (x < self.n)
+        ok = (x >= 0) & (x < self.n)
+        # Float inputs must still be *integers*: 2.5 is not in Discrete(4).
+        # (The fused megastep kernel computes int observations in f32 rows —
+        # kernels/envstep — so a missing round-trip cast shows up here.)
+        if not jnp.issubdtype(x.dtype, jnp.integer):
+            ok = ok & (x == jnp.floor(x))
+        return ok
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,15 +93,21 @@ class MultiDiscrete(Space):
         return (len(self.nvec),)
 
     def sample(self, key: jax.Array) -> jax.Array:
-        keys = jax.random.split(key, len(self.nvec))
-        return jnp.stack(
-            [jax.random.randint(k, (), 0, n, dtype=self.dtype) for k, n in zip(keys, self.nvec)]
-        )
+        # One randint with a per-axis maxval vector (not len(nvec) split
+        # streams + a stack): one threefry call however many axes, and the
+        # dtype is the space's own — a 64-cell grid space was previously 64
+        # unrolled randint ops.
+        nv = jnp.asarray(self.nvec, self.dtype)
+        return jax.random.randint(key, (len(self.nvec),), 0, nv,
+                                  dtype=self.dtype)
 
     def contains(self, x) -> jax.Array:
         x = jnp.asarray(x)
         nv = jnp.asarray(self.nvec, self.dtype)
-        return jnp.all((x >= 0) & (x < nv))
+        ok = (x >= 0) & (x < nv)
+        if not jnp.issubdtype(x.dtype, jnp.integer):  # see Discrete.contains
+            ok = ok & (x == jnp.floor(x))
+        return jnp.all(ok)
 
 
 def sample_batch(space: Space, key: jax.Array, batch_size: int) -> jax.Array:
@@ -111,6 +123,12 @@ def sample_batch(space: Space, key: jax.Array, batch_size: int) -> jax.Array:
         low, high = space._bounds()
         u = jax.random.uniform(key, (batch_size,) + space.shape, space.dtype)
         return low + u * (high - low)
+    if isinstance(space, MultiDiscrete):
+        # Broadcast maxval across the batch; keeps the space dtype (the old
+        # vmap fallback unrolled len(nvec) randints per batch element).
+        nv = jnp.asarray(space.nvec, space.dtype)
+        return jax.random.randint(key, (batch_size, len(space.nvec)), 0, nv,
+                                  dtype=space.dtype)
     keys = jax.random.split(key, batch_size)
     return jax.vmap(space.sample)(keys)
 

@@ -7,6 +7,7 @@ from repro.core.registry import register
 from repro.core.wrappers import FrameStack, ObsToPixels, TimeLimit
 from repro.envs.arcade import Breakout, Pong
 from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
+from repro.envs.grid import CliffWalk, FrozenLake, Maze, Snake
 from repro.envs.multitask import Multitask
 from repro.envs.puzzle import LightsOut
 
@@ -25,6 +26,25 @@ register("Breakout-v0",
          lambda **kw: FrameStack(ObsToPixels(TimeLimit(Breakout(**kw), 1000)),
                                  4))
 
+# Procedural gridworld suite (envs/grid): the level layout is regenerated
+# per episode from the AutoReset key chain. `-v0` ids observe the cell-code
+# grid (the layout IS the observation, MultiDiscrete); `-px` ids observe 4
+# stacked 84×84 on-device renders of the same scene (arcade pixel pipeline).
+register("FrozenLake-v0", lambda **kw: TimeLimit(FrozenLake(**kw), 100))
+register("CliffWalk-v0", lambda **kw: TimeLimit(CliffWalk(**kw), 100))
+register("Snake-v0", lambda **kw: TimeLimit(Snake(**kw), 200))
+register("Maze-v0", lambda **kw: TimeLimit(Maze(**kw), 200))
+register("FrozenLake-px",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(FrozenLake(**kw), 100)),
+                                 4))
+register("CliffWalk-px",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(CliffWalk(**kw), 100)),
+                                 4))
+register("Snake-px",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Snake(**kw), 200)), 4))
+register("Maze-px",
+         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Maze(**kw), 200)), 4))
+
 # Raw (unwrapped) variants for custom composition, mirroring CaiRL's
 # template-composition style: Flatten<TimeLimit<200, CartPoleEnv>>().
 # Arcade `-raw` ids expose the state-vector ("virtual Flash memory") obs.
@@ -36,6 +56,11 @@ register("Multitask-raw", Multitask)
 register("LightsOut-raw", LightsOut)
 register("Pong-raw", Pong)
 register("Breakout-raw", Breakout)
+register("FrozenLake-raw", FrozenLake)
+register("CliffWalk-raw", CliffWalk)
+register("Snake-raw", Snake)
+register("Maze-raw", Maze)
 
-__all__ = ["Acrobot", "Breakout", "CartPole", "MountainCar", "Pendulum",
-           "Multitask", "LightsOut", "Pong"]
+__all__ = ["Acrobot", "Breakout", "CartPole", "CliffWalk", "FrozenLake",
+           "MountainCar", "Maze", "Pendulum", "Multitask", "LightsOut",
+           "Pong", "Snake"]

@@ -1,6 +1,7 @@
 """Interpreted-Python baselines ("AI Gym" comparator in the paper's Fig. 1/2)."""
 from repro.envs.baseline_python.arcade import BreakoutPy, PongPy
 from repro.envs.baseline_python.classic import AcrobotPy, CartPolePy, MountainCarPy, PendulumPy
+from repro.envs.baseline_python.grid import CliffWalkPy, FrozenLakePy, MazePy, SnakePy
 from repro.envs.baseline_python.multitask import MultitaskPy
 
 BASELINES = {
@@ -11,7 +12,12 @@ BASELINES = {
     "Multitask-v0": MultitaskPy,
     "Pong-v0": PongPy,
     "Breakout-v0": BreakoutPy,
+    "FrozenLake-v0": FrozenLakePy,
+    "CliffWalk-v0": CliffWalkPy,
+    "Snake-v0": SnakePy,
+    "Maze-v0": MazePy,
 }
 
 __all__ = ["CartPolePy", "AcrobotPy", "MountainCarPy", "PendulumPy",
-           "MultitaskPy", "PongPy", "BreakoutPy", "BASELINES"]
+           "MultitaskPy", "PongPy", "BreakoutPy", "FrozenLakePy",
+           "CliffWalkPy", "SnakePy", "MazePy", "BASELINES"]

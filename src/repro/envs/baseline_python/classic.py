@@ -58,6 +58,11 @@ class CartPolePy(_BaselineEnv):
         self.steps = 0
         return self._obs()
 
+    def set_state(self, state):
+        self.x, self.x_dot = float(state.x), float(state.x_dot)
+        self.theta, self.theta_dot = float(state.theta), float(state.theta_dot)
+        self.steps = 0
+
     def _obs(self):
         return [self.x, self.x_dot, self.theta, self.theta_dot]
 
@@ -98,6 +103,11 @@ class MountainCarPy(_BaselineEnv):
         self.steps = 0
         return [self.position, self.velocity]
 
+    def set_state(self, state):
+        self.position = float(state.position)
+        self.velocity = float(state.velocity)
+        self.steps = 0
+
     def step(self, action):
         self.velocity += (action - 1) * 0.001 + math.cos(3 * self.position) * (-0.0025)
         self.velocity = max(min(self.velocity, 0.07), -0.07)
@@ -130,6 +140,11 @@ class AcrobotPy(_BaselineEnv):
         self.s = [self._rng.uniform(-0.1, 0.1) for _ in range(4)]
         self.steps = 0
         return self._obs()
+
+    def set_state(self, state):
+        self.s = [float(state.theta1), float(state.theta2),
+                  float(state.dtheta1), float(state.dtheta2)]
+        self.steps = 0
 
     def _obs(self):
         t1, t2, d1, d2 = self.s
@@ -192,6 +207,11 @@ class PendulumPy(_BaselineEnv):
         self.theta_dot = self._rng.uniform(-1.0, 1.0)
         self.steps = 0
         return self._obs()
+
+    def set_state(self, state):
+        self.theta = float(state.theta)
+        self.theta_dot = float(state.theta_dot)
+        self.steps = 0
 
     def _obs(self):
         return [math.cos(self.theta), math.sin(self.theta), self.theta_dot]

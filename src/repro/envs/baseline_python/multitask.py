@@ -17,6 +17,13 @@ class MultitaskPy(_BaselineEnv):
         self.steps = 0
         return self._obs()
 
+    def set_state(self, state):
+        self.paddle_x = float(state.paddle_x)
+        self.ball_x, self.ball_y = float(state.ball_x), float(state.ball_y)
+        self.lane, self.obs_lane = int(state.lane), int(state.obs_lane)
+        self.obs_y = float(state.obs_y)
+        self.steps = 0
+
     def _obs(self):
         lane_oh = [1.0 if self.lane == i else 0.0 for i in range(3)]
         obs_oh = [1.0 if self.obs_lane == i else 0.0 for i in range(3)]

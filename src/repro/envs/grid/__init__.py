@@ -1,0 +1,15 @@
+"""Procedural gridworld suite — per-episode level generation (Jumanji-style
+scalable scenarios on the CaiRL execution model).
+
+Four games, all pure-JAX element-wise dynamics with the *level itself*
+(hole/cliff/wall layout, goal position, food priorities) resampled inside
+`reset(key)` — which means the AutoReset key chain regenerates levels on
+device, bit-identically between the vmap and fused megastep paths (see
+envs/grid/common.py and kernels/envstep/specs.py).
+"""
+from repro.envs.grid.cliff_walk import CliffWalk
+from repro.envs.grid.frozen_lake import FrozenLake
+from repro.envs.grid.maze import Maze
+from repro.envs.grid.snake import Snake
+
+__all__ = ["CliffWalk", "FrozenLake", "Maze", "Snake"]

@@ -1,0 +1,86 @@
+"""CliffWalk — Sutton & Barto's cliff, procedurally extended per episode.
+
+The classic 4×12 cliff (bottom row between start and goal) plus random
+extra cliff cells sampled each episode. Solvability is structural: a random
+"safe row" `k` is drawn per episode and column 0, row k and the last column
+are kept clear, so the up-across-down route always exists while the interior
+hazard field changes every reset.
+
+Stepping into a cliff cell teleports the agent back to start with reward
+-100 (episode continues — Gym semantics); every other step is -1 and only
+the goal terminates. Observation: cell-code grid, `MultiDiscrete`:
+0 free, 1 cliff, 2 goal, 3 agent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Discrete, MultiDiscrete
+from repro.envs.grid.common import grid_scene, move_deltas
+
+CLIFF_P = 0.25         # interior extra-cliff probability (off the safe rails)
+CLIFF_REWARD = -100.0
+STEP_REWARD = -1.0
+INTENS = (0.25, 0.0, 0.8, 1.0)   # free, cliff (dark), goal, agent
+
+
+class CliffWalkState(NamedTuple):
+    pos: jax.Array     # () int32 cell index
+    cliff: jax.Array   # (n_rows*n_cols,) int32 in {0, 1}
+
+
+class CliffWalk(Env):
+    def __init__(self, n_rows: int = 4, n_cols: int = 12):
+        self.n_rows = n_rows
+        self.n_cols = n_cols
+        self.m = n_rows * n_cols
+        self.start = (n_rows - 1) * n_cols      # bottom-left
+        self.observation_space = MultiDiscrete((4,) * self.m)
+        self.action_space = Discrete(4)
+        self.frame_shape = (84, 84)
+        self.reward_range = (CLIFF_REWARD, STEP_REWARD)
+
+    def reset(self, key):
+        ku, kk = jax.random.split(key)
+        u = jax.random.uniform(ku, (self.m,))
+        safe_row = jax.random.randint(kk, (), 0, self.n_rows - 1)
+        idx = jnp.arange(self.m)
+        r, c = idx // self.n_cols, idx % self.n_cols
+        safe = (c == 0) | (c == self.n_cols - 1) | (r == safe_row)
+        bottom = (r == self.n_rows - 1) & (c > 0) & (c < self.n_cols - 1)
+        cliff = jnp.where(safe, 0, (bottom | (u < CLIFF_P)).astype(jnp.int32))
+        state = CliffWalkState(jnp.asarray(self.start, jnp.int32), cliff)
+        return state, self._obs(state)
+
+    def _obs(self, s: CliffWalkState):
+        idx = jnp.arange(self.m)
+        codes = jnp.where(idx == s.pos, 3,
+                          jnp.where(idx == self.m - 1, 2, s.cliff))
+        return codes.astype(jnp.int32)
+
+    def step(self, state: CliffWalkState, action, key):
+        dr, dc = move_deltas(action)
+        r, c = state.pos // self.n_cols, state.pos % self.n_cols
+        nr = jnp.clip(r + dr, 0, self.n_rows - 1)
+        nc = jnp.clip(c + dc, 0, self.n_cols - 1)
+        npos = (nr * self.n_cols + nc).astype(jnp.int32)
+        fell = state.cliff[npos] > 0
+        goal = npos == self.m - 1
+        pos = jnp.where(fell, self.start, npos).astype(jnp.int32)
+        reward = jnp.where(fell, CLIFF_REWARD, STEP_REWARD).astype(jnp.float32)
+        ns = CliffWalkState(pos, state.cliff)
+        return Timestep(ns, self._obs(ns), reward, goal, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: CliffWalkState):
+        return grid_scene(self._obs(state), self.n_rows, self.n_cols, INTENS)
+
+    def render(self, state: CliffWalkState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

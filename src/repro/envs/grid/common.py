@@ -1,0 +1,72 @@
+"""Shared helpers for the procedural gridworld suite (envs/grid).
+
+Every grid game regenerates its *level* (hole/cliff/wall layout, goal
+position) per episode inside `reset(key)`. Because `reset` is pure JAX, the
+same AutoReset threefry chain that gives the megastep kernel vmap/fused
+bit-parity (kernels/envstep/ops.py precomputes the fresh reset states with
+the identical `jax.random` call sequence) also drives on-device procedural
+generation: every autoreset boundary is a brand-new level, with zero host
+involvement.
+
+Solvability is by construction, not rejection sampling: `carve_path` marks a
+random monotone lattice path from the start to the goal, and generators
+never place an obstacle on a carved cell — so FrozenLake/Maze levels are
+always solvable (tests/test_property.py checks this with a host-side BFS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def carve_path(key, n_rows: int, n_cols: int, goal_r, goal_c) -> jax.Array:
+    """Random monotone lattice path (0,0) -> (goal_r, goal_c).
+
+    Returns a flat (n_rows * n_cols,) int32 mask with 1 on every path cell
+    (start and goal included). The walk takes one row- or col-step toward
+    the goal per iteration, choosing the axis at random while both are
+    needed; the loop runs the worst-case n_rows + n_cols - 2 steps and
+    no-ops once the goal is reached, so `goal_r`/`goal_c` may be traced.
+    """
+    m = n_rows * n_cols
+    steps = n_rows + n_cols - 2
+    u = jax.random.uniform(key, (steps,))
+    goal_r = jnp.asarray(goal_r, jnp.int32)
+    goal_c = jnp.asarray(goal_c, jnp.int32)
+
+    def body(i, carry):
+        r, c, mask = carry
+        need_r = goal_r - r
+        need_c = goal_c - c
+        go_row = (need_r != 0) & ((need_c == 0) | (u[i] < 0.5))
+        go_col = (~go_row) & (need_c != 0)
+        r = r + jnp.where(go_row, jnp.sign(need_r), 0)
+        c = c + jnp.where(go_col, jnp.sign(need_c), 0)
+        return r, c, mask.at[r * n_cols + c].set(1)
+
+    mask0 = jnp.zeros((m,), jnp.int32).at[0].set(1)
+    zero = jnp.asarray(0, jnp.int32)
+    _, _, mask = jax.lax.fori_loop(0, steps, body, (zero, zero, mask0))
+    return mask
+
+
+def move_deltas(action):
+    """Gym FrozenLake action order: 0 left, 1 down, 2 right, 3 up."""
+    a = jnp.asarray(action)
+    dr = jnp.where(a == 1, 1, 0) - jnp.where(a == 3, 1, 0)
+    dc = jnp.where(a == 2, 1, 0) - jnp.where(a == 0, 1, 0)
+    return dr, dc
+
+
+def grid_scene(codes, n_rows: int, n_cols: int, intens_table):
+    """Per-cell capsule scene (kernels/raster contract): one point capsule
+    at each cell centre, intensity looked up from the cell's obs code —
+    the LightsOut render idiom, shared by the whole grid suite."""
+    m = n_rows * n_cols
+    idx = jnp.arange(m)
+    cx = ((idx % n_cols).astype(jnp.float32) + 0.5) / n_cols
+    cy = ((idx // n_cols).astype(jnp.float32) + 0.5) / n_rows
+    rad = jnp.full((m,), 0.35 / max(n_rows, n_cols), jnp.float32)
+    segs = jnp.stack([cx, cy, cx, cy, rad], axis=-1)
+    intens = jnp.asarray(intens_table, jnp.float32)[codes]
+    return segs.astype(jnp.float32), intens

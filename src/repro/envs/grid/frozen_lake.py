@@ -1,0 +1,81 @@
+"""FrozenLake — procedurally-generated per episode.
+
+Gym's FrozenLake with the map itself resampled on every `reset(key)`: each
+episode draws a fresh hole field (density `HOLE_P`) and carves a random
+monotone path start -> goal so the level is always solvable (Jumanji-style
+per-episode level generation, but on the AutoReset key chain so the fused
+megastep path regenerates levels bit-identically to vmap).
+
+Deterministic transitions (no slip) keep the dynamics action-deterministic,
+which is what lets the megastep kernel fuse them (kernels/envstep/specs.py
+mirrors `step` operation-for-operation). Observation is the full cell-code
+grid — the layout IS the observation — as a `MultiDiscrete` vector:
+0 frozen, 1 hole, 2 goal, 3 agent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Discrete, MultiDiscrete
+from repro.envs.grid.common import carve_path, grid_scene, move_deltas
+
+HOLE_P = 0.3          # per-cell hole probability (off the carved path)
+GOAL_REWARD = 1.0
+INTENS = (0.25, 0.0, 0.8, 1.0)   # frozen, hole (dark), goal, agent
+
+
+class FrozenLakeState(NamedTuple):
+    pos: jax.Array     # () int32 cell index
+    holes: jax.Array   # (n*n,) int32 in {0, 1} — this episode's level
+
+
+class FrozenLake(Env):
+    def __init__(self, n: int = 4):
+        self.n = n
+        self.m = n * n
+        self.observation_space = MultiDiscrete((4,) * self.m)
+        self.action_space = Discrete(4)
+        self.frame_shape = (84, 84)
+        self.reward_range = (0.0, GOAL_REWARD)
+
+    def reset(self, key):
+        kh, kp = jax.random.split(key)
+        u = jax.random.uniform(kh, (self.m,))
+        path = carve_path(kp, self.n, self.n, self.n - 1, self.n - 1)
+        holes = ((u < HOLE_P) & (path == 0)).astype(jnp.int32)
+        state = FrozenLakeState(jnp.asarray(0, jnp.int32), holes)
+        return state, self._obs(state)
+
+    def _obs(self, s: FrozenLakeState):
+        idx = jnp.arange(self.m)
+        codes = jnp.where(idx == s.pos, 3,
+                          jnp.where(idx == self.m - 1, 2, s.holes))
+        return codes.astype(jnp.int32)
+
+    def step(self, state: FrozenLakeState, action, key):
+        n = self.n
+        dr, dc = move_deltas(action)
+        r, c = state.pos // n, state.pos % n
+        nr = jnp.clip(r + dr, 0, n - 1)
+        nc = jnp.clip(c + dc, 0, n - 1)
+        npos = (nr * n + nc).astype(jnp.int32)
+        hole = state.holes[npos] > 0
+        goal = npos == self.m - 1
+        done = hole | goal
+        reward = jnp.where(goal, GOAL_REWARD, 0.0).astype(jnp.float32)
+        ns = FrozenLakeState(npos, state.holes)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: FrozenLakeState):
+        return grid_scene(self._obs(state), self.n, self.n, INTENS)
+
+    def render(self, state: FrozenLakeState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -1,0 +1,83 @@
+"""Maze — random wall field with a per-episode random goal.
+
+Each `reset(key)` samples a fresh wall layout AND a fresh goal cell (drawn
+from the far half of the board), then carves a random monotone path from the
+start to the goal so every level is solvable by construction. Walls block —
+moving into a wall (or off the board) leaves the agent in place. Reaching
+the goal terminates with +1; every other step is reward 0.
+
+Both the layout and the goal live in the state, so the fused megastep path
+regenerates them across autoreset boundaries exactly like vmap (the fresh
+reset states are precomputed on the AutoReset key chain). Observation:
+cell-code grid, `MultiDiscrete`: 0 free, 1 wall, 2 goal, 3 agent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Discrete, MultiDiscrete
+from repro.envs.grid.common import carve_path, grid_scene, move_deltas
+
+WALL_P = 0.35          # per-cell wall probability (off the carved path)
+GOAL_REWARD = 1.0
+INTENS = (0.12, 0.55, 0.85, 1.0)   # free, wall, goal, agent
+
+
+class MazeState(NamedTuple):
+    pos: jax.Array     # () int32 cell index
+    goal: jax.Array    # () int32 cell index — regenerated per episode
+    walls: jax.Array   # (n*n,) int32 in {0, 1}
+
+
+class Maze(Env):
+    def __init__(self, n: int = 8):
+        self.n = n
+        self.m = n * n
+        self.observation_space = MultiDiscrete((4,) * self.m)
+        self.action_space = Discrete(4)
+        self.frame_shape = (84, 84)
+        self.reward_range = (0.0, GOAL_REWARD)
+
+    def reset(self, key):
+        ku, kg, kp = jax.random.split(key, 3)
+        u = jax.random.uniform(ku, (self.m,))
+        goal = jax.random.randint(kg, (), self.m // 2, self.m)
+        path = carve_path(kp, self.n, self.n, goal // self.n, goal % self.n)
+        walls = ((u < WALL_P) & (path == 0)).astype(jnp.int32)
+        state = MazeState(jnp.asarray(0, jnp.int32), goal.astype(jnp.int32),
+                          walls)
+        return state, self._obs(state)
+
+    def _obs(self, s: MazeState):
+        idx = jnp.arange(self.m)
+        codes = jnp.where(idx == s.pos, 3,
+                          jnp.where(idx == s.goal, 2, s.walls))
+        return codes.astype(jnp.int32)
+
+    def step(self, state: MazeState, action, key):
+        n = self.n
+        dr, dc = move_deltas(action)
+        r, c = state.pos // n, state.pos % n
+        nr = jnp.clip(r + dr, 0, n - 1)
+        nc = jnp.clip(c + dc, 0, n - 1)
+        cand = (nr * n + nc).astype(jnp.int32)
+        blocked = state.walls[cand] > 0
+        npos = jnp.where(blocked, state.pos, cand).astype(jnp.int32)
+        done = npos == state.goal
+        reward = jnp.where(done, GOAL_REWARD, 0.0).astype(jnp.float32)
+        ns = MazeState(npos, state.goal, state.walls)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: MazeState):
+        return grid_scene(self._obs(state), self.n, self.n, INTENS)
+
+    def render(self, state: MazeState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

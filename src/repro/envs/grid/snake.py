@@ -1,0 +1,124 @@
+"""Snake — the classic grid game with a deterministic procedural food chain.
+
+The body is a per-cell age grid (cell value = steps until that segment
+vacates; the head cell holds the current length), so the whole game is
+element-wise arithmetic over the board — exactly the shape the megastep
+kernel wants.
+
+Food placement is the interesting bit: the fused kernel is random-free
+(kernels/envstep/megastep.py — randomness would break vmap/fused
+bit-parity), so food cannot be resampled with `jax.random` inside `step`.
+Instead `reset` draws a per-cell priority field `prio` (part of the level,
+regenerated per episode on the AutoReset key chain), and the k-th food
+spawns at the free cell minimising frac(prio + k·φ) — a deterministic
+low-discrepancy sequence over the board that both the vmap env and the
+row-major kernel compute with the same min-reductions, bit for bit.
+
+Rewards: +1 eat, -1 death (wall or body), 0 otherwise; the episode also
+ends if the body fills the board. Observation: cell-code grid,
+`MultiDiscrete`: 0 empty, 1 body, 2 head, 3 food.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import Env, Timestep
+from repro.core.spaces import Discrete, MultiDiscrete
+from repro.envs.grid.common import grid_scene, move_deltas
+
+PHI = 0.6180339887498949   # golden-ratio conjugate: the food hop per eat
+EAT_REWARD = 1.0
+DEATH_REWARD = -1.0
+INTENS = (0.0, 0.55, 1.0, 0.8)   # empty, body, head, food
+
+
+class SnakeState(NamedTuple):
+    ages: jax.Array    # (n*n,) int32 — 0 empty, else steps-to-vacate
+    head: jax.Array    # () int32 cell index
+    food: jax.Array    # () int32 cell index
+    length: jax.Array  # () int32
+    eaten: jax.Array   # () int32 — k, indexes the food sequence
+    prio: jax.Array    # (n*n,) float32 — this episode's food priorities
+
+
+def place_food(prio, ages, head, k):
+    """Free cell minimising frac(prio + k·φ); ties broken by lowest index.
+
+    Written as element-wise ops + min-reductions over the cell axis so the
+    row-major fused spec (kernels/envstep/specs.py) is the same math.
+    """
+    m = prio.shape[-1]
+    idx = jnp.arange(m, dtype=jnp.float32)
+    vals = prio + k.astype(jnp.float32) * PHI
+    vals = vals - jnp.floor(vals)
+    free = (ages == 0) & (jnp.arange(m) != head)
+    v = jnp.where(free, vals, 2.0)
+    vmin = jnp.min(v)
+    return jnp.min(jnp.where(v == vmin, idx, float(m))).astype(jnp.int32)
+
+
+class Snake(Env):
+    def __init__(self, n: int = 6):
+        self.n = n
+        self.m = n * n
+        self.observation_space = MultiDiscrete((4,) * self.m)
+        self.action_space = Discrete(4)
+        self.frame_shape = (84, 84)
+        self.reward_range = (DEATH_REWARD, EAT_REWARD)
+
+    def reset(self, key):
+        center = (self.n // 2) * self.n + self.n // 2
+        prio = jax.random.uniform(key, (self.m,))
+        head = jnp.asarray(center, jnp.int32)
+        ages = jnp.zeros((self.m,), jnp.int32).at[center].set(1)
+        food = place_food(prio, ages, head, jnp.asarray(0, jnp.int32))
+        state = SnakeState(ages, head, food, jnp.asarray(1, jnp.int32),
+                           jnp.asarray(0, jnp.int32), prio)
+        return state, self._obs(state)
+
+    def _obs(self, s: SnakeState):
+        idx = jnp.arange(self.m)
+        codes = jnp.where(idx == s.head, 2,
+                          jnp.where(s.ages > 0, 1,
+                                    jnp.where(idx == s.food, 3, 0)))
+        return codes.astype(jnp.int32)
+
+    def step(self, state: SnakeState, action, key):
+        n, m = self.n, self.m
+        idx = jnp.arange(m)
+        dr, dc = move_deltas(action)
+        r, c = state.head // n, state.head % n
+        nr, nc = r + dr, c + dc
+        inb = (nr >= 0) & (nr < n) & (nc >= 0) & (nc < n)
+        cand = (jnp.clip(nr, 0, n - 1) * n
+                + jnp.clip(nc, 0, n - 1)).astype(jnp.int32)
+        eat = inb & (cand == state.food)
+        # Tail vacates one cell unless eating (the snake grows by standing
+        # still at the back); moving into the just-vacated tail cell is legal.
+        ages2 = jnp.maximum(state.ages - jnp.where(eat, 0, 1), 0)
+        hit_body = ages2[cand] > 0
+        die = ~inb | hit_body
+        new_len = (state.length + eat).astype(jnp.int32)
+        ages3 = jnp.where(idx == cand, new_len, ages2).astype(jnp.int32)
+        win = new_len >= m
+        done = die | win
+        eaten = (state.eaten + eat).astype(jnp.int32)
+        placed = place_food(state.prio, ages3, cand, eaten)
+        food = jnp.where(eat & ~done, placed, state.food).astype(jnp.int32)
+        reward = (eat.astype(jnp.float32) * EAT_REWARD
+                  + die.astype(jnp.float32) * DEATH_REWARD)
+        ns = SnakeState(ages3, cand, food, new_len, eaten, state.prio)
+        return Timestep(ns, self._obs(ns), reward, done, {})
+
+    # -- rendering (capsule scene; see kernels/raster) -----------------------
+    def scene(self, state: SnakeState):
+        return grid_scene(self._obs(state), self.n, self.n, INTENS)
+
+    def render(self, state: SnakeState):
+        from repro.kernels.raster import rasterize_single
+
+        segs, intens = self.scene(state)
+        return rasterize_single(segs, intens, *self.frame_shape)

@@ -149,8 +149,9 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
         raise NotImplementedError(
             f"no fused megastep spec for {type(env.unwrapped).__name__}; "
             "supported: CartPole, MountainCar, Pendulum, Acrobot, LightsOut, "
-            "Pong, Breakout (bare or under a single TimeLimit, arcade also "
-            "under ObsToPixels / FrameStack(ObsToPixels))")
+            "Pong, Breakout, FrozenLake, CliffWalk, Snake, Maze (bare or "
+            "under a single TimeLimit, arcade also under ObsToPixels / "
+            "FrameStack(ObsToPixels))")
     spec, max_steps = found
 
     acts = jnp.asarray(actions)
@@ -209,10 +210,14 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
 
     if not pixels:
         new_state = AutoResetState(inner, final_keys)
-        info["terminal_obs"] = jnp.swapaxes(tobs, -1, -2)
+        # The kernel computes in f32 rows; integer observation spaces (the
+        # grid suite's MultiDiscrete cell codes) get their dtype back here —
+        # values are small ints, exact through the f32 round-trip.
+        odt = core.observation_space.dtype
+        info["terminal_obs"] = jnp.swapaxes(tobs, -1, -2).astype(odt)
         return new_state, Timestep(
-            state=new_state, obs=jnp.swapaxes(obs, -1, -2), reward=reward,
-            done=done_b, info=info)
+            state=new_state, obs=jnp.swapaxes(obs, -1, -2).astype(odt),
+            reward=reward, done=done_b, info=info)
 
     # Pixel pipeline: rasterise the chunk's stepped (pre-reset) and fresh
     # frames in two batched on-device calls, then apply the frame-stack ring

@@ -240,6 +240,203 @@ def _lightsout_spec(env) -> FusedSpec:
     return FusedSpec("LightsOut", m + 1, m, flatten, unflatten, step_rows)
 
 
+# -- Grid suite (envs/grid) --------------------------------------------------
+#
+# The level layout (holes/cliff/walls, goal, food priorities) rides in the
+# state rows, so the precomputed AutoReset fresh states regenerate it per
+# episode *inside* the kernel's lane-select — on-device procedural
+# generation on the same key chain that gives vmap/fused bit-parity.
+
+def _grid_moves(act):
+    """(1, B) f32 action -> (dr, dc) in the Gym FrozenLake order."""
+    dr = jnp.where(act == 1.0, 1.0, 0.0) - jnp.where(act == 3.0, 1.0, 0.0)
+    dc = jnp.where(act == 2.0, 1.0, 0.0) - jnp.where(act == 0.0, 1.0, 0.0)
+    return dr, dc
+
+
+def _grid_move(pos, act, n_rows, n_cols):
+    """(1, B) f32 cell index + action -> edge-clipped new cell index.
+
+    The f32 twin of `clip(r+dr) * n_cols + clip(c+dc)` in the env `step`s —
+    exact for any board whose cell count fits f32 integers."""
+    dr, dc = _grid_moves(act)
+    r = jnp.floor(pos / n_cols)
+    c = pos - r * n_cols
+    nr = jnp.clip(r + dr, 0.0, n_rows - 1.0)
+    nc = jnp.clip(c + dc, 0.0, n_cols - 1.0)
+    return nr * n_cols + nc
+
+
+def _cell_iota(m):
+    """(m, 1) f32 per-cell index plane; 2-D iota is TPU-native."""
+    return jax.lax.broadcasted_iota(jnp.float32, (m, 1), 0)
+
+
+def _frozen_lake_spec(env) -> FusedSpec:
+    from repro.envs.grid.frozen_lake import GOAL_REWARD, FrozenLakeState
+
+    n, m = env.n, env.m
+
+    def flatten(s: FrozenLakeState) -> jax.Array:
+        holes = jnp.swapaxes(s.holes, -1, -2).astype(jnp.float32)
+        return jnp.concatenate([_row(s.pos).astype(jnp.float32), holes],
+                               axis=-2)
+
+    def unflatten(rows: jax.Array) -> FrozenLakeState:
+        return FrozenLakeState(
+            rows[0].astype(jnp.int32),
+            jnp.swapaxes(rows[1:1 + m], -1, -2).astype(jnp.int32))
+
+    def step_rows(rows, act):
+        pos, holes = rows[0:1], rows[1:1 + m]
+        npos = _grid_move(pos, act, n, n)
+        idx = _cell_iota(m)
+        at = (idx == npos).astype(jnp.float32)
+        hole = jnp.sum(at * holes, axis=0, keepdims=True)
+        goal = (npos == m - 1.0).astype(jnp.float32)
+        done = jnp.maximum(hole, goal)
+        reward = goal * GOAL_REWARD
+        codes = jnp.where(at > 0.0, 3.0,
+                          jnp.where(idx == m - 1.0, 2.0, holes))
+        new = jnp.concatenate([npos, holes], axis=0)
+        return new, codes, reward, done
+
+    return FusedSpec("FrozenLake", 1 + m, m, flatten, unflatten, step_rows)
+
+
+def _cliff_walk_spec(env) -> FusedSpec:
+    from repro.envs.grid.cliff_walk import (CLIFF_REWARD, STEP_REWARD,
+                                            CliffWalkState)
+
+    n_rows, n_cols, m = env.n_rows, env.n_cols, env.m
+    start = float(env.start)
+
+    def flatten(s: CliffWalkState) -> jax.Array:
+        cliff = jnp.swapaxes(s.cliff, -1, -2).astype(jnp.float32)
+        return jnp.concatenate([_row(s.pos).astype(jnp.float32), cliff],
+                               axis=-2)
+
+    def unflatten(rows: jax.Array) -> CliffWalkState:
+        return CliffWalkState(
+            rows[0].astype(jnp.int32),
+            jnp.swapaxes(rows[1:1 + m], -1, -2).astype(jnp.int32))
+
+    def step_rows(rows, act):
+        pos, cliff = rows[0:1], rows[1:1 + m]
+        npos = _grid_move(pos, act, n_rows, n_cols)
+        idx = _cell_iota(m)
+        at = (idx == npos).astype(jnp.float32)
+        fell = jnp.sum(at * cliff, axis=0, keepdims=True)
+        goal = (npos == m - 1.0).astype(jnp.float32)
+        new_pos = jnp.where(fell > 0.0, start, npos)
+        reward = jnp.where(fell > 0.0, CLIFF_REWARD, STEP_REWARD)
+        at2 = (idx == new_pos).astype(jnp.float32)
+        codes = jnp.where(at2 > 0.0, 3.0,
+                          jnp.where(idx == m - 1.0, 2.0, cliff))
+        new = jnp.concatenate([new_pos, cliff], axis=0)
+        return new, codes, reward, goal
+
+    return FusedSpec("CliffWalk", 1 + m, m, flatten, unflatten, step_rows)
+
+
+def _maze_spec(env) -> FusedSpec:
+    from repro.envs.grid.maze import GOAL_REWARD, MazeState
+
+    n, m = env.n, env.m
+
+    def flatten(s: MazeState) -> jax.Array:
+        walls = jnp.swapaxes(s.walls, -1, -2).astype(jnp.float32)
+        return jnp.concatenate(
+            [_stack_rows([s.pos, s.goal]), walls], axis=-2)
+
+    def unflatten(rows: jax.Array) -> MazeState:
+        return MazeState(
+            rows[0].astype(jnp.int32), rows[1].astype(jnp.int32),
+            jnp.swapaxes(rows[2:2 + m], -1, -2).astype(jnp.int32))
+
+    def step_rows(rows, act):
+        pos, goal, walls = rows[0:1], rows[1:2], rows[2:2 + m]
+        cand = _grid_move(pos, act, n, n)
+        idx = _cell_iota(m)
+        at = (idx == cand).astype(jnp.float32)
+        blocked = jnp.sum(at * walls, axis=0, keepdims=True)
+        npos = jnp.where(blocked > 0.0, pos, cand)
+        done = (npos == goal).astype(jnp.float32)
+        reward = done * GOAL_REWARD
+        at2 = (idx == npos).astype(jnp.float32)
+        codes = jnp.where(at2 > 0.0, 3.0, jnp.where(idx == goal, 2.0, walls))
+        new = jnp.concatenate([npos, goal, walls], axis=0)
+        return new, codes, reward, done
+
+    return FusedSpec("Maze", 2 + m, m, flatten, unflatten, step_rows)
+
+
+def _snake_spec(env) -> FusedSpec:
+    from repro.envs.grid.snake import (DEATH_REWARD, EAT_REWARD, PHI,
+                                       SnakeState)
+
+    n, m = env.n, env.m
+
+    def flatten(s: SnakeState) -> jax.Array:
+        ages = jnp.swapaxes(s.ages, -1, -2).astype(jnp.float32)
+        prio = jnp.swapaxes(s.prio, -1, -2).astype(jnp.float32)
+        return jnp.concatenate(
+            [_stack_rows([s.head, s.food, s.length, s.eaten]), ages, prio],
+            axis=-2)
+
+    def unflatten(rows: jax.Array) -> SnakeState:
+        return SnakeState(
+            ages=jnp.swapaxes(rows[4:4 + m], -1, -2).astype(jnp.int32),
+            head=rows[0].astype(jnp.int32),
+            food=rows[1].astype(jnp.int32),
+            length=rows[2].astype(jnp.int32),
+            eaten=rows[3].astype(jnp.int32),
+            prio=jnp.swapaxes(rows[4 + m:4 + 2 * m], -1, -2))
+
+    def step_rows(rows, act):
+        head, food = rows[0:1], rows[1:2]
+        length, eaten = rows[2:3], rows[3:4]
+        ages, prio = rows[4:4 + m], rows[4 + m:4 + 2 * m]
+        dr, dc = _grid_moves(act)
+        r = jnp.floor(head / n)
+        c = head - r * n
+        nr, nc = r + dr, c + dc
+        inb = ((nr >= 0.0) & (nr <= n - 1.0)
+               & (nc >= 0.0) & (nc <= n - 1.0)).astype(jnp.float32)
+        cand = (jnp.clip(nr, 0.0, n - 1.0) * n + jnp.clip(nc, 0.0, n - 1.0))
+        eat = inb * (cand == food).astype(jnp.float32)
+        ages2 = jnp.maximum(ages - jnp.where(eat > 0.0, 0.0, 1.0), 0.0)
+        idx = _cell_iota(m)
+        at = (idx == cand).astype(jnp.float32)
+        hit = jnp.sum(at * (ages2 > 0.0).astype(jnp.float32), axis=0,
+                      keepdims=True)
+        die = jnp.maximum(1.0 - inb, hit)
+        new_len = length + eat
+        ages3 = jnp.where(at > 0.0, new_len, ages2)
+        win = (new_len >= m).astype(jnp.float32)
+        done = jnp.maximum(die, win)
+        new_eaten = eaten + eat
+        # Deterministic food chain (snake.place_food, same min-reductions):
+        # k-th food = free cell minimising frac(prio + k·φ).
+        vals = prio + new_eaten * PHI
+        vals = vals - jnp.floor(vals)
+        free = ((ages3 == 0.0) & (idx != cand)).astype(jnp.float32)
+        v = jnp.where(free > 0.0, vals, 2.0)
+        vmin = jnp.min(v, axis=0, keepdims=True)
+        placed = jnp.min(jnp.where(v == vmin, idx, float(m)), axis=0,
+                         keepdims=True)
+        new_food = jnp.where(eat * (1.0 - done) > 0.0, placed, food)
+        reward = eat * EAT_REWARD + die * DEATH_REWARD
+        codes = jnp.where(at > 0.0, 2.0,
+                          jnp.where(ages3 > 0.0, 1.0,
+                                    jnp.where(idx == new_food, 3.0, 0.0)))
+        new = jnp.concatenate([cand, new_food, new_len, new_eaten, ages3,
+                               prio], axis=0)
+        return new, codes, reward, done
+
+    return FusedSpec("Snake", 4 + 2 * m, m, flatten, unflatten, step_rows)
+
+
 # -- Pong --------------------------------------------------------------------
 
 def _pong_spec(env) -> FusedSpec:
@@ -360,6 +557,7 @@ def _breakout_spec(env) -> FusedSpec:
 def _factories():
     from repro.envs.arcade import Breakout, Pong
     from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
+    from repro.envs.grid import CliffWalk, FrozenLake, Maze, Snake
     from repro.envs.puzzle import LightsOut
 
     return {
@@ -370,6 +568,10 @@ def _factories():
         LightsOut: _lightsout_spec,
         Pong: _pong_spec,
         Breakout: _breakout_spec,
+        FrozenLake: _frozen_lake_spec,
+        CliffWalk: _cliff_walk_spec,
+        Maze: _maze_spec,
+        Snake: _snake_spec,
     }
 
 

@@ -1,0 +1,83 @@
+"""Shared pytest plumbing and cross-module test helpers.
+
+`--regen-golden` (tests/test_golden.py):
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --regen-golden
+
+rewrites every committed trace under tests/golden/ from the current
+dynamics instead of comparing against them. Use after an *intentional*
+dynamics change; the diff of the regenerated JSON is the review artifact.
+
+The helpers below are the single copies of the parity oracle
+(`vmap_reference` — K iterated `Vec(AutoReset(env)).step` calls), its
+comparison policy (`assert_leaves_match` — exact for int/bool/key leaves,
+<=1e-5 for floats) and the layout-solvability oracle (`bfs_reachable`),
+shared by tests/test_conformance.py, tests/test_envstep_fused.py,
+tests/test_grid.py and tests/test_property.py so the contracts cannot
+drift apart between suites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json from current env dynamics "
+             "instead of asserting against them")
+
+
+@pytest.fixture
+def regen_golden(request) -> bool:
+    return request.config.getoption("--regen-golden")
+
+
+def vmap_reference(env, num_envs, key, actions):
+    """K iterated `Vec(AutoReset(env)).step` calls — the oracle trajectory
+    every fused/pool execution path must reproduce."""
+    from repro.core.wrappers import AutoReset, Vec
+
+    venv = Vec(AutoReset(env), num_envs)
+    state0, _ = venv.reset(key)
+    state, outs = state0, []
+    for t in range(actions.shape[0]):
+        ts = venv.step(state, actions[t], jax.random.fold_in(key, t))
+        state = ts.state
+        outs.append((ts.obs, ts.reward, ts.done, ts.info["terminal_obs"]))
+    stack = lambda i: jnp.stack([o[i] for o in outs])
+    return state0, state, stack(0), stack(1), stack(2), stack(3)
+
+
+def assert_leaves_match(ref, got, what=""):
+    """Parity contract: dtype/shape equal; ints, bools and PRNG keys exact;
+    floats to 1e-5/1e-6 (compilers may reassociate)."""
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape, (what, a.dtype,
+                                                           b.dtype)
+        if np.issubdtype(a.dtype, np.integer) or a.dtype in (np.bool_,
+                                                             np.uint32):
+            np.testing.assert_array_equal(a, b, err_msg=what)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                       err_msg=what)
+
+
+def bfs_reachable(blocked, n_rows, n_cols, start, goal):
+    """Host-side search over a generated layout (4-neighbourhood)."""
+    seen, frontier = {start}, [start]
+    while frontier:
+        pos = frontier.pop()
+        if pos == goal:
+            return True
+        r, c = divmod(pos, n_cols)
+        for dr, dc in ((0, 1), (0, -1), (1, 0), (-1, 0)):
+            nr, nc = r + dr, c + dc
+            np_ = nr * n_cols + nc
+            if (0 <= nr < n_rows and 0 <= nc < n_cols and np_ not in seen
+                    and not blocked[np_]):
+                seen.add(np_)
+                frontier.append(np_)
+    return False

@@ -1,0 +1,215 @@
+"""Registry-driven cross-backend conformance harness.
+
+Every id in `registry.registered()` is swept automatically — new env
+families inherit coverage instead of hand-listing it (the EnvPool lesson:
+the execution engine must be validated uniformly across every env it
+hosts). Per id:
+
+  - space contract: obs/action shapes + dtypes, `contains`, `sample_batch`;
+  - `info["truncated"]` contract: present iff a TimeLimit is in the stack;
+  - AutoReset-after-done: episodes keep flowing across the reset boundary;
+  - vmap vs fused (`jnp` reference + `pallas_interpret` kernel) bit-parity,
+    including autoreset boundaries (grid ids regenerate their *level* there);
+  - pool parity: `EnvPool` fused rollout == vmap rollout;
+  - interpreted-python parity: baselines with `set_state` must reproduce the
+    compiled trajectory step for step from a shared state.
+
+The hand-listed per-env parity cases that used to live in
+tests/test_envstep_fused.py are folded into this sweep; that module keeps
+only the scenario tests (truncation counters, ring semantics, RL parity).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_leaves_match, vmap_reference
+
+from repro.core import make, registered
+from repro.core.env import supports_fused_step
+from repro.core.spaces import Box, Discrete, MultiDiscrete, sample_batch
+from repro.core.wrappers import AutoReset, TimeLimit, Wrapper
+from repro.envs.baseline_python import BASELINES
+from repro.kernels.envstep import fused_step
+from repro.pool import EnvPool
+
+ALL_IDS = registered()
+FUSED_IDS = [n for n in ALL_IDS if supports_fused_step(make(n))]
+#: ids with an interpreted twin that supports `set_state` (trajectory parity
+#: needs a shared start state) and a state-vector obs (pixel twins observe
+#: the state vector, not frames).
+BASELINE_IDS = [n for n in ALL_IDS
+                if n in BASELINES and hasattr(BASELINES[n], "set_state")
+                and len(make(n).observation_space.shape) == 1]
+BACKENDS = ("jnp", "pallas_interpret")
+
+
+def _has_time_limit(env) -> bool:
+    while isinstance(env, Wrapper):
+        if isinstance(env, TimeLimit):
+            return True
+        env = env.env
+    return False
+
+
+def _action_block(env, key, k: int, num_envs: int):
+    return jnp.stack([
+        sample_batch(env.action_space, jax.random.fold_in(key, 100 + t),
+                     num_envs) for t in range(k)])
+
+
+def _assert_in_space(space, obs, what=""):
+    obs = np.asarray(obs)
+    assert obs.shape == tuple(space.shape), (what, obs.shape, space.shape)
+    assert obs.dtype == np.dtype(space.dtype), (what, obs.dtype, space.dtype)
+    assert bool(np.all(np.asarray(space.contains(obs)))), (what, obs)
+
+
+# -- fast per-id contract checks ---------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_space_contract(name):
+    """reset/step outputs live in the declared spaces, right dtypes."""
+    env = make(name)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    _assert_in_space(env.observation_space, obs, f"{name} reset obs")
+    action = env.action_space.sample(jax.random.fold_in(key, 1))
+    assert np.asarray(action).dtype == np.dtype(env.action_space.dtype)
+    ts = env.step(state, action, jax.random.fold_in(key, 2))
+    _assert_in_space(env.observation_space, ts.obs, f"{name} step obs")
+    assert np.asarray(ts.reward).dtype == np.float32
+    assert np.asarray(ts.done).dtype == np.bool_
+    batch = sample_batch(env.action_space, key, 3)
+    assert batch.shape == (3,) + tuple(env.action_space.shape)
+    assert batch.dtype == np.dtype(env.action_space.dtype)
+    for a in np.asarray(batch):
+        assert bool(np.all(np.asarray(env.action_space.contains(a))))
+
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_truncated_info_contract(name):
+    """`info["truncated"]` is surfaced iff the stack carries a TimeLimit."""
+    env = make(name)
+    key = jax.random.PRNGKey(3)
+    state, _ = env.reset(key)
+    ts = env.step(state, env.action_space.sample(jax.random.fold_in(key, 1)),
+                  jax.random.fold_in(key, 2))
+    if _has_time_limit(env):
+        assert "truncated" in ts.info, name
+        assert np.asarray(ts.info["truncated"]).dtype == np.bool_
+    else:
+        assert "truncated" not in ts.info, name
+
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_autoreset_after_done(name):
+    """Episodes flow across the reset boundary for every id (an outer
+    TimeLimit(4) forces `done` even for ids that rarely terminate)."""
+    env = AutoReset(TimeLimit(make(name), 4))
+    key = jax.random.PRNGKey(4)
+    state, obs = env.reset(key)
+    dones = 0
+    for i in range(9):
+        a = env.action_space.sample(jax.random.fold_in(key, i))
+        ts = env.step(state, a, jax.random.fold_in(key, 100 + i))
+        state = ts.state
+        dones += int(np.asarray(ts.done))
+        _assert_in_space(env.observation_space, ts.obs, f"{name} step {i}")
+        assert "terminal_obs" in ts.info
+    assert dones >= 2, name  # at least steps 4 and 8 cut + reset
+
+
+# -- cross-backend sweep (the heavy part; `make test-conformance`) -----------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_backend_parity(name, backend):
+    """vmap vs fused megastep bit-parity for every fused-capable id.
+
+    K=16 crosses autoreset boundaries for the fast-terminating ids — for the
+    grid suite that means the *level layout* regenerates inside the fused
+    chunk and must match the vmap stream bit for bit.
+    """
+    env = make(name)
+    if not supports_fused_step(env):
+        pytest.skip(f"{name}: no fused megastep spec")
+    num_envs, k = 4, 16
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    actions = _action_block(env, key, k, num_envs)
+    st0, st_ref, obs_r, rew_r, done_r, tobs_r = vmap_reference(
+        env, num_envs, key, actions)
+    st_f, ts = fused_step(env, st0, actions, backend=backend)
+    assert ts.obs.dtype == obs_r.dtype, (name, ts.obs.dtype, obs_r.dtype)
+    assert_leaves_match((obs_r, rew_r, done_r, tobs_r),
+                        (ts.obs, ts.reward, ts.done,
+                         ts.info["terminal_obs"]), f"{name}/{backend}")
+    assert_leaves_match(st_ref, st_f, f"{name}/{backend} state")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_pool_conformance(name):
+    """EnvPool hosts every id; fused-capable ids must match the vmap engine
+    through the pool's chunked rollout (including a remainder chunk)."""
+    key = jax.random.PRNGKey(7)
+    rew_v, eps_v, _ = EnvPool(name, 4).rollout(14, key)
+    assert np.all(np.isfinite(np.asarray(rew_v)))
+    if name not in FUSED_IDS:
+        return
+    rew_f, eps_f, _ = EnvPool(name, 4, backend="jnp", unroll=5).rollout(14, key)
+    np.testing.assert_allclose(np.asarray(rew_v), np.asarray(rew_f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(eps_v), np.asarray(eps_f))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", BASELINE_IDS)
+def test_python_baseline_parity(name):
+    """Interpreted twin == compiled env, step for step, from a shared state.
+
+    `set_state` copies the compiled env's (procedurally generated) state
+    into the python twin; both are then driven by the same action sequence.
+    Stops at the first episode end (the twins manage their own resets).
+    """
+    env = make(name)
+    key = jax.random.PRNGKey(sum(map(ord, name)) + 1)
+    state, obs = env.reset(key)
+    base_state = state
+    while hasattr(base_state, "inner"):
+        base_state = base_state.inner
+    py = BASELINES[name]()
+    py.seed(0)
+    py.reset()
+    py.set_state(base_state)
+    discrete = isinstance(env.action_space, Discrete)
+    for t in range(12):
+        a = sample_batch(env.action_space, jax.random.fold_in(key, t), 1)[0]
+        ts = env.step(state, a, jax.random.fold_in(key, 500 + t))
+        obs_py, rew_py, done_py, info_py = py.step(
+            int(a) if discrete else np.asarray(a))
+        np.testing.assert_allclose(np.asarray(ts.obs, np.float64),
+                                   np.asarray(obs_py, np.float64),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"{name}@{t}")
+        np.testing.assert_allclose(float(ts.reward), float(rew_py),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"{name}@{t}")
+        assert bool(ts.done) == bool(done_py), f"{name}@{t}"
+        assert bool(ts.info["truncated"]) == bool(info_py["truncated"])
+        state = ts.state
+        if bool(ts.done):
+            break
+
+
+def test_discovery_is_complete():
+    """The sweep really is registry-driven: the families this repo ships are
+    all present, and the fused set is discovered, not hand-listed."""
+    assert len(ALL_IDS) >= 28
+    for fam in ("CartPole-v1", "Pong-v0", "LightsOut-v0", "FrozenLake-v0",
+                "Snake-px", "Maze-raw"):
+        assert fam in ALL_IDS
+    assert "FrozenLake-v0" in FUSED_IDS and "Snake-raw" in FUSED_IDS
+    assert "Multitask-v0" not in FUSED_IDS
+    assert len(BASELINE_IDS) >= 9
+    for sp in (Box, Discrete, MultiDiscrete):  # all space types swept
+        assert any(isinstance(make(n).observation_space, sp)
+                   or isinstance(make(n).action_space, sp) for n in ALL_IDS)

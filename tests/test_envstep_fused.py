@@ -1,4 +1,4 @@
-"""Fused megastep parity suite: kernels/envstep vs K iterated vmap steps.
+"""Fused megastep scenario tests: kernels/envstep vs K iterated vmap steps.
 
 The contract (docs/pool.md): for every fused-capable env, `fused_step` /
 `EnvPool(backend=...)` must reproduce the scan-of-vmap-step path — exact for
@@ -6,6 +6,12 @@ int/bool fields (done, board states, step counters), <=1e-5 for floats —
 including auto-reset boundaries and time-limit truncation. The Pallas kernel
 runs under interpret=True here (CPU host); the jnp reference covers the
 dispatch path compiled rollouts use off-TPU.
+
+The per-id random-action parity sweep is registry-driven and lives in
+tests/test_conformance.py (`test_backend_parity`) — every registered id
+inherits it, nothing is hand-listed. This module keeps the *scenario*
+cases: specific truncation/termination timings, pool chunk seams, HLO
+residency and RL training parity.
 """
 import dataclasses
 
@@ -13,9 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_leaves_match, vmap_reference
 
 from repro.core import make
-from repro.core.env import supports_fused_step
 from repro.core.spaces import sample_batch
 from repro.core.wrappers import AutoReset, TimeLimit, Vec
 from repro.envs.classic import CartPole, MountainCar
@@ -29,61 +35,16 @@ from repro.pool import EnvPool, ShardedEnvPool, default_pool_mesh, make_pool
 pytestmark = pytest.mark.slow
 
 BACKENDS = ("jnp", "pallas_interpret")
-FUSED_IDS = ["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1",
-             "LightsOut-v0", "CartPole-raw"]
-
-
-def _vmap_reference(env, num_envs, key, actions):
-    """K iterated `Vec(AutoReset(env)).step` calls — the oracle trajectory."""
-    venv = Vec(AutoReset(env), num_envs)
-    state0, _ = venv.reset(key)
-    state, outs = state0, []
-    for t in range(actions.shape[0]):
-        ts = venv.step(state, actions[t], jax.random.fold_in(key, t))
-        state = ts.state
-        outs.append((ts.obs, ts.reward, ts.done, ts.info["terminal_obs"]))
-    stack = lambda i: jnp.stack([o[i] for o in outs])
-    return state0, state, stack(0), stack(1), stack(2), stack(3)
-
-
-def _assert_state_close(ref_state, fused_state):
-    for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(fused_state)):
-        assert a.dtype == b.dtype and a.shape == b.shape
-        if np.issubdtype(np.asarray(a).dtype, np.integer):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        elif np.asarray(a).dtype == np.uint32:  # PRNG keys
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        else:
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-5, atol=1e-6)
 
 
 def _check_parity(env, num_envs, key, actions, backend):
-    st0, st_ref, obs_r, rew_r, done_r, tobs_r = _vmap_reference(
+    st0, st_ref, obs_r, rew_r, done_r, tobs_r = vmap_reference(
         env, num_envs, key, actions)
     st_f, ts = fused_step(env, st0, actions, backend=backend)
-    np.testing.assert_allclose(np.asarray(ts.obs), np.asarray(obs_r),
-                               rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(ts.reward), np.asarray(rew_r),
-                               rtol=1e-5, atol=1e-6)
-    np.testing.assert_array_equal(np.asarray(ts.done), np.asarray(done_r))
-    np.testing.assert_allclose(np.asarray(ts.info["terminal_obs"]),
-                               np.asarray(tobs_r), rtol=1e-5, atol=1e-6)
-    _assert_state_close(st_ref, st_f)
+    assert_leaves_match((obs_r, rew_r, done_r, tobs_r),
+                        (ts.obs, ts.reward, ts.done, ts.info["terminal_obs"]))
+    assert_leaves_match(st_ref, st_f)
     return done_r
-
-
-@pytest.mark.parametrize("backend", BACKENDS)
-@pytest.mark.parametrize("name", FUSED_IDS)
-def test_fused_matches_vmap(name, backend):
-    """Random-action parity for every fused env, kernel and reference."""
-    env = make(name)
-    num_envs, k = 5, 12
-    key = jax.random.PRNGKey(sum(map(ord, name)))
-    actions = jnp.stack([
-        sample_batch(env.action_space, jax.random.fold_in(key, 100 + t),
-                     num_envs) for t in range(k)])
-    _check_parity(env, num_envs, key, actions, backend)
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
@@ -116,12 +77,6 @@ def test_fused_lightsout_terminal_and_truncation(backend):
                          for t in range(k)])
     done = _check_parity(env, num_envs, key, actions, backend)
     assert int(np.asarray(done).sum()) > 0
-
-
-def test_supports_fused_step_gallery_contract():
-    for name in FUSED_IDS:
-        assert supports_fused_step(make(name)), name
-    assert not supports_fused_step(make("Multitask-v0"))
 
 
 def test_unsupported_env_raises():

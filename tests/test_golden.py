@@ -1,0 +1,104 @@
+"""Golden-trace regression tests: silent dynamics drift fails loudly.
+
+For every registered id a small seeded 32-step batched rollout is reduced
+to per-step (obs, reward, done) checksums and committed under
+tests/golden/<id>.json. Any change to dynamics, reset distributions,
+procedural level generation, wrapper semantics or the RNG plumbing shifts
+the checksums and fails here — the failure is the *intended* signal; after
+an intentional change, regenerate with
+
+    python -m pytest tests/test_golden.py --regen-golden
+
+and review the JSON diff. Checksums are float64 sums computed on the host
+from the f32 trajectories, so they are deterministic for a given backend.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make, registered
+from repro.core.spaces import sample_batch
+from repro.core.wrappers import AutoReset, Vec
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+STEPS = 32
+BATCH = 2
+
+
+def _params():
+    # Pixel ids render 84×84 frames every step (stepped + autoreset-fresh):
+    # real work, so they ride in the `slow` sweep with the other heavy tests.
+    out = []
+    for name in registered():
+        pixel = len(make(name).observation_space.shape) >= 2
+        marks = [pytest.mark.slow] if pixel else []
+        out.append(pytest.param(name, marks=marks))
+    return out
+
+
+def trace(name: str) -> dict:
+    """Seeded rollout -> per-step [obs_sum, reward_sum, done_count]."""
+    env = make(name)
+    venv = Vec(AutoReset(env), BATCH)
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    state, obs = venv.reset(key)
+    rows = []
+    for t in range(STEPS):
+        a = sample_batch(env.action_space, jax.random.fold_in(key, 1000 + t),
+                         BATCH)
+        ts = venv.step(state, a, jax.random.fold_in(key, t))
+        state = ts.state
+        rows.append([float(np.asarray(ts.obs, np.float64).sum()),
+                     float(np.asarray(ts.reward, np.float64).sum()),
+                     int(np.asarray(ts.done).sum())])
+    space = env.observation_space
+    return {
+        "env": name,
+        "steps": STEPS,
+        "batch": BATCH,
+        "obs_shape": list(space.shape),
+        "obs_dtype": str(np.dtype(space.dtype)),
+        "reset_obs_sum": float(np.asarray(obs, np.float64).sum()),
+        "rows": rows,
+    }
+
+
+def _path(name: str) -> pathlib.Path:
+    return GOLDEN_DIR / f"{name}.json"
+
+
+@pytest.mark.parametrize("name", _params())
+def test_golden_trace(name, regen_golden):
+    got = trace(name)
+    path = _path(name)
+    if regen_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1) + "\n")
+        return
+    assert path.exists(), (
+        f"no golden trace for {name!r} — a new env id must commit one: "
+        "run `python -m pytest tests/test_golden.py --regen-golden`")
+    want = json.loads(path.read_text())
+    assert got["obs_shape"] == want["obs_shape"], name
+    assert got["obs_dtype"] == want["obs_dtype"], name
+    np.testing.assert_allclose(got["reset_obs_sum"], want["reset_obs_sum"],
+                               rtol=1e-4, atol=1e-4, err_msg=f"{name} reset")
+    got_rows = np.asarray(got["rows"], np.float64)
+    want_rows = np.asarray(want["rows"], np.float64)
+    assert got_rows.shape == want_rows.shape, name
+    np.testing.assert_allclose(
+        got_rows, want_rows, rtol=1e-4, atol=1e-4,
+        err_msg=f"{name}: dynamics drifted from the committed golden trace "
+                "(tests/golden/) — if intentional, rerun with --regen-golden "
+                "and review the JSON diff")
+
+
+def test_every_registered_id_has_a_committed_trace():
+    """New families cannot ship without goldens (registry-driven, like the
+    conformance sweep)."""
+    missing = [n for n in registered() if not _path(n).exists()]
+    assert not missing, f"golden traces missing for {missing}"

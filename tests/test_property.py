@@ -98,6 +98,71 @@ def test_raster_bounds(b, s, seed):
     assert float(fb.max()) <= float(intens.max()) + 1e-6
 
 
+# -- grid suite: regenerated levels are always solvable -----------------------------
+@given(st.integers(0, 2**16))
+def test_frozen_lake_levels_solvable(seed):
+    from conftest import bfs_reachable
+    from repro.envs.grid import FrozenLake
+
+    env = FrozenLake()
+    state, _ = env.reset(jax.random.PRNGKey(seed))
+    holes = np.asarray(state.holes)
+    assert bfs_reachable(holes, env.n, env.n, 0, env.m - 1), holes
+
+
+@given(st.integers(0, 2**16))
+def test_maze_levels_solvable(seed):
+    from conftest import bfs_reachable
+    from repro.envs.grid import Maze
+
+    env = Maze()
+    state, _ = env.reset(jax.random.PRNGKey(seed))
+    walls = np.asarray(state.walls)
+    goal = int(state.goal)
+    assert not walls[goal]  # the goal cell itself is carved free
+    assert bfs_reachable(walls, env.n, env.n, 0, goal), (walls, goal)
+
+
+# -- grid suite: rewards within declared bounds, obs inside the space ----------------
+@given(st.integers(0, 2**16))
+def test_grid_rewards_and_obs_bounded(seed):
+    from repro.core.wrappers import AutoReset
+    from repro.envs.grid import CliffWalk, FrozenLake, Maze, Snake
+
+    key = jax.random.PRNGKey(seed)
+    for env in (FrozenLake(), CliffWalk(), Snake(), Maze()):
+        lo, hi = env.reward_range
+        aenv = AutoReset(env)
+        state, obs = aenv.reset(key)
+        for i in range(12):
+            a = env.action_space.sample(jax.random.fold_in(key, i))
+            ts = aenv.step(state, a, jax.random.fold_in(key, 100 + i))
+            state = ts.state
+            assert lo <= float(ts.reward) <= hi, (env.name, float(ts.reward))
+            assert bool(env.observation_space.contains(np.asarray(ts.obs))), \
+                (env.name, np.asarray(ts.obs))
+
+
+@given(st.integers(0, 2**16))
+def test_snake_body_length_invariant(seed):
+    """The age grid is consistent: #body cells == length while alive."""
+    from repro.envs.grid import Snake
+
+    env = Snake()
+    key = jax.random.PRNGKey(seed)
+    state, _ = env.reset(key)
+    for i in range(15):
+        ts = env.step(state, env.action_space.sample(jax.random.fold_in(key, i)),
+                      jax.random.fold_in(key, 100 + i))
+        if bool(ts.done):
+            break
+        state = ts.state
+        ages = np.asarray(state.ages)
+        assert int((ages > 0).sum()) == int(state.length)
+        assert int(ages.max()) == int(state.length)  # head carries the length
+        assert not ages[int(state.food)]             # food never on the body
+
+
 # -- attention masks: window never widens the receptive field -----------------------
 @given(st.integers(4, 24), st.integers(1, 8), st.integers(0, 2**16))
 def test_window_subset_of_causal(l, w, seed):

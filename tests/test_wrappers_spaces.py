@@ -29,6 +29,51 @@ def test_multidiscrete():
     assert bool(sp.contains(s))
 
 
+def test_contains_rejects_fractional_values():
+    """Regression (int32-vs-f32 audit): a float obs that is not integral is
+    NOT in a Discrete/MultiDiscrete space — the fused megastep path computes
+    int observations in f32 rows, and a missing round-trip cast must fail
+    `contains`, not silently pass (tests/test_conformance.py relies on it)."""
+    assert not bool(Discrete(4).contains(jnp.asarray(2.5)))
+    assert bool(Discrete(4).contains(jnp.asarray(2.0)))   # integral float ok
+    assert bool(Discrete(4).contains(jnp.asarray(2)))
+    sp = MultiDiscrete((4, 4, 4))
+    assert not bool(sp.contains(jnp.asarray([1.0, 2.5, 3.0])))
+    assert bool(sp.contains(jnp.asarray([1.0, 2.0, 3.0])))
+    assert bool(sp.contains(np.asarray([1, 2, 3], np.int64)))  # host ints
+
+
+def test_multidiscrete_sample_dtype_and_bounds():
+    """Regression: `sample`/`sample_batch` keep the space dtype and respect
+    per-axis bounds (layout-valued grid observation spaces are wide —
+    (4,)*64 — so the batch path must not unroll per-axis randints)."""
+    from repro.core.spaces import sample_batch
+
+    sp = MultiDiscrete((4,) * 9)
+    s = sp.sample(jax.random.PRNGKey(0))
+    assert s.dtype == sp.dtype and s.shape == (9,)
+    assert bool(sp.contains(s))
+    batch = sample_batch(sp, jax.random.PRNGKey(1), 64)
+    assert batch.dtype == sp.dtype and batch.shape == (64, 9)
+    arr = np.asarray(batch)
+    assert arr.min() >= 0 and arr.max() < 4
+    assert len(np.unique(arr)) == 4  # every code shows up across 576 draws
+    ragged = MultiDiscrete((2, 3, 7))
+    rb = np.asarray(sample_batch(ragged, jax.random.PRNGKey(2), 128))
+    assert (rb < np.asarray([2, 3, 7])).all() and (rb >= 0).all()
+    assert rb[:, 2].max() >= 3  # axis bounds are per-axis, not min(nvec)
+
+
+def test_sample_batch_dtype_matches_space():
+    from repro.core.spaces import sample_batch
+
+    for sp in (Discrete(5), Box(low=-1.0, high=1.0, shape=(3,)),
+               MultiDiscrete((2, 5))):
+        batch = sample_batch(sp, jax.random.PRNGKey(3), 7)
+        assert batch.dtype == sp.dtype, type(sp).__name__
+        assert batch.shape == (7,) + tuple(sp.shape)
+
+
 def test_time_limit_truncates():
     env = TimeLimit(Pendulum(), 5)  # pendulum never self-terminates
     key = jax.random.PRNGKey(0)
