@@ -3,15 +3,23 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-conformance bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-conformance api-check bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
 # Skip the heavy fused/pool sweeps and training-parity tests (marked `slow`)
 # for a quick inner-loop signal; `make test` remains the tier-1 gate.
-test-fast:
+# Runs the API-surface snapshot first: a broken drop-in surface should fail
+# in seconds, not after the whole sweep.
+test-fast: api-check
 	$(PY) -m pytest -x -q -m "not slow"
+
+# CI gate: the public exports of repro / repro.core / repro.pool / cairl
+# match the checked-in snapshot (tests/test_api_surface.py) — refactors
+# cannot silently break the drop-in surface.
+api-check:
+	$(PY) -m pytest -x -q tests/test_api_surface.py
 
 # Registry-driven conformance: every registered env id × every backend
 # (python baseline / vmap / fused / pool) + the committed golden traces.

@@ -16,7 +16,7 @@ from typing import Dict
 import jax
 
 from repro.launch.hlo_analysis import host_transfer_ops
-from repro.pool import EnvPool, HostPool
+from repro.pool import EnvPool, make_vec
 
 ENVS = ["CartPole-v1", "Acrobot-v1", "MountainCar-v0", "Pendulum-v1"]
 # Arcade pixel games: every step renders 84×84 observations on device, the
@@ -31,7 +31,7 @@ GRID = ["FrozenLake-v0", "CliffWalk-v0", "Snake-v0", "Maze-v0"]
 def bench_compiled(name: str, steps: int, batch: int, render: bool,
                    trials: int = 3, backend: str = "vmap",
                    unroll: int = 32) -> float:
-    pool = EnvPool(name, batch, backend=backend, unroll=unroll)
+    pool = make_vec(name, batch, backend=backend, unroll=unroll)
     jax.block_until_ready(pool.rollout(steps, jax.random.PRNGKey(0), render)[0])  # compile
     best = 0.0
     for t in range(trials):
@@ -43,7 +43,7 @@ def bench_compiled(name: str, steps: int, batch: int, render: bool,
 
 
 def bench_python(name: str, steps: int, render: bool, trials: int = 2) -> float:
-    pool = HostPool(name, num_envs=1)
+    pool = make_vec(name, 1, host=True)
     best = 0.0
     for t in range(trials):
         t0 = time.perf_counter()
@@ -97,7 +97,7 @@ def run_backends(steps: int = 2000, batch: int = 64, unroll: int = 32,
         if "vmap" in backends:
             r["vmap_sps"] = bench_compiled(name, steps, batch, render=False)
         if "pallas" in backends:
-            pool = EnvPool(name, batch, backend="pallas", unroll=u)
+            pool = make_vec(name, batch, backend="pallas", unroll=u)
             transfers = host_transfer_ops(
                 pool.rollout_lowered(min(steps, 256)).compile().as_text())
             r["host_transfers"] = len(transfers)
@@ -111,6 +111,42 @@ def run_backends(steps: int = 2000, batch: int = 64, unroll: int = 32,
             r["gym_sps"] = bench_python(name, h_steps, render=pixel)
         rows[name] = r
     return rows
+
+
+def bench_frontend(name: str = "CartPole-v1", batch: int = 64,
+                   steps: int = 500, trials: int = 3) -> Dict:
+    """Frontend-overhead row: `make_vec` vs raw `EnvPool` construction.
+
+    Measures (a) constructor + first-step compile wall-clock and (b)
+    steady-state steps/s through each constructor, on the same vmap step
+    engine — the evidence that the declarative `EnvSpec`/`make_vec` frontend
+    is construction-time-only and adds no steady-state cost.
+    """
+    import numpy as np
+
+    def once(ctor):
+        t0 = time.perf_counter()
+        pool = ctor()
+        pool.reset(seed=0)
+        jax.block_until_ready(pool.step(pool.sample_actions(0))[0])
+        startup_s = time.perf_counter() - t0
+        jax.block_until_ready(pool.rollout(steps, jax.random.PRNGKey(0))[0])
+        best = 0.0
+        for t in range(trials):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                pool.rollout(steps, jax.random.PRNGKey(t + 1))[0])
+            best = max(best, steps * batch / (time.perf_counter() - t0))
+        return startup_s, best
+
+    mv_start, mv_sps = once(lambda: make_vec(name, batch, backend="vmap"))
+    raw_start, raw_sps = once(lambda: EnvPool(name, batch, backend="vmap"))
+    return {
+        "env": name, "batch": batch, "steps": steps,
+        "make_vec_startup_s": mv_start, "envpool_startup_s": raw_start,
+        "make_vec_sps": mv_sps, "envpool_sps": raw_sps,
+        "steady_state_ratio": mv_sps / raw_sps if raw_sps else float(np.nan),
+    }
 
 
 def main(emit):
@@ -147,6 +183,12 @@ if __name__ == "__main__":
           f"steps={args.steps} batch={args.batch} unroll={args.unroll}")
     rows = run_backends(args.steps, args.batch, args.unroll,
                         include_host=not args.smoke, backends=backends)
+    frontend = bench_frontend(batch=args.batch, steps=min(args.steps, 500))
+    print(f"{'frontend':>16}: make_vec {frontend['make_vec_sps']:>12,.0f} "
+          f"steps/s vs EnvPool {frontend['envpool_sps']:>12,.0f} "
+          f"({frontend['steady_state_ratio']:.2f}x steady-state; startup "
+          f"{frontend['make_vec_startup_s']:.2f}s vs "
+          f"{frontend['envpool_startup_s']:.2f}s)")
     for name, r in rows.items():
         line = f"{name:>16}: vmap {r['vmap_sps']:>12,.0f} steps/s"
         if "pallas_sps" in r:
@@ -161,6 +203,6 @@ if __name__ == "__main__":
         with open(args.json, "w") as f:
             json.dump({"steps": args.steps, "batch": args.batch,
                        "unroll": args.unroll,
-                       "backend_filter": args.backend, "envs": rows}, f,
-                      indent=2)
+                       "backend_filter": args.backend, "envs": rows,
+                       "frontend_overhead": frontend}, f, indent=2)
         print(f"wrote {args.json}")

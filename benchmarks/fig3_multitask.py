@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.core import make
-from repro.pool import EnvPool
+from repro.pool import make_vec
 from repro.rl.dqn import DQNConfig, greedy_returns, train_compiled
 
 
@@ -20,7 +20,7 @@ def run(steps: int = 12000, name: str = "Multitask-v0",
         exploration_steps: int = 6000, eval_max_steps: int = 1000):
     env = make(name)
     # random-policy baseline return, via the pool's compiled rollout
-    rew, eps, _ = EnvPool(env, 16).rollout(2000, jax.random.PRNGKey(1))
+    rew, eps, _ = make_vec(env, 16).rollout(2000, jax.random.PRNGKey(1))
     random_return = float(rew.sum() / jax.numpy.maximum(eps.sum(), 1))
 
     cfg = DQNConfig(num_envs=4, exploration_steps=exploration_steps,

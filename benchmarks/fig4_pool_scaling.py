@@ -12,7 +12,8 @@ pool:
 
 Device residency is *verified*, not assumed: the scanned step loop's
 optimized HLO must contain zero host-transfer instructions
-(repro.launch.hlo_analysis.host_transfer_ops).
+(repro.launch.hlo_analysis.host_transfer_ops). Every pool — plain, fused
+and sharded — is built through the unified `repro.make_vec` frontend.
 
 Run: PYTHONPATH=src python benchmarks/fig4_pool_scaling.py
      [--steps 2000] [--batches 1,64,1024] [--env CartPole-v1]
@@ -33,7 +34,7 @@ from typing import Dict, List
 import jax
 
 from repro.launch.hlo_analysis import host_transfer_ops
-from repro.pool import EnvPool, ShardedEnvPool, default_pool_mesh
+from repro.pool import default_pool_mesh, make_vec
 
 
 def bench_pool(pool, steps: int, trials: int = 3) -> float:
@@ -56,7 +57,7 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
         batches=(1, 64, 1024), unroll: int = 32) -> Dict:
     rows: Dict[str, Dict] = {}
     for batch in batches:
-        pool = EnvPool(env_name, batch)
+        pool = make_vec(env_name, batch, backend="vmap")
         transfers = check_device_resident(pool)
         rows[f"batch{batch}"] = {
             "steps_per_s": bench_pool(pool, steps),
@@ -71,7 +72,8 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
 
     if supports_fused_step(make(env_name)):
         for batch in batches:
-            pool = EnvPool(env_name, batch, backend="pallas", unroll=unroll)
+            pool = make_vec(env_name, batch, backend="pallas",
+                            unroll=unroll)
             transfers = check_device_resident(pool)
             rows[f"pallas_batch{batch}"] = {
                 "steps_per_s": bench_pool(pool, steps),
@@ -84,7 +86,7 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
     # rendering — the heavy-env case where pooled execution pays off most.
     if env_name == "CartPole-v1":
         pixel_batch = min(64, max(batches))
-        pool = EnvPool("Pong-v0", pixel_batch, backend="pallas", unroll=8)
+        pool = make_vec("Pong-v0", pixel_batch, backend="pallas", unroll=8)
         rows[f"pixel_pong_batch{pixel_batch}"] = {
             "steps_per_s": bench_pool(pool, min(steps, 500)),
             "batch": pixel_batch,
@@ -97,7 +99,8 @@ def run(env_name: str = "CartPole-v1", steps: int = 2000,
     base = max(batches)
     for d in dev_counts:
         dev_batch = base - base % d or d  # round down to divide d; min d
-        pool = ShardedEnvPool(env_name, dev_batch, mesh=default_pool_mesh(d))
+        pool = make_vec(env_name, dev_batch, backend="vmap",
+                        mesh=default_pool_mesh(d))
         rows[f"devices{d}"] = {
             "steps_per_s": bench_pool(pool, steps),
             "batch": dev_batch,

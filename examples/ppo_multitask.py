@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.core import make
-from repro.pool import EnvPool
+from repro.pool import make_vec
 from repro.rl.ppo import PPOConfig, train
 
 ap = argparse.ArgumentParser()
@@ -21,7 +21,7 @@ args = ap.parse_args()
 
 env = make("Multitask-v0")
 
-rew, eps, _ = EnvPool(env, 16).rollout(2000, jax.random.PRNGKey(1))
+rew, eps, _ = make_vec(env, 16).rollout(2000, jax.random.PRNGKey(1))
 random_return = float(rew.sum() / max(int(eps.sum()), 1))
 print(f"random policy return: {random_return:.1f}")
 

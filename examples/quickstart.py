@@ -20,8 +20,10 @@ for ep in range(3):
         ret += r
     print(f"episode {ep}: {steps} steps, return {ret:.0f}, frame {obs.shape}")
 
-# ---- EnvPool: batched Gym-style stepping, state lives on device --------------
-pool = cairl.EnvPool("CartPole-v1", num_envs=256)
+# ---- make_vec: batched Gym-style stepping, state lives on device ------------
+# The unified vector frontend: one constructor for every pool backend
+# (backend="auto" picks the fused megastep engine when the id supports it).
+pool = cairl.make_vec("CartPole-v1", 256, backend="vmap")
 obs = pool.reset(seed=0)                       # (256, 4), device-resident
 for i in range(100):
     obs, rew, done, info = pool.step(pool.sample_actions(i))

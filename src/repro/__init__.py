@@ -1,4 +1,33 @@
 """CaiRL on JAX/TPU — compiled RL environment toolkit + multi-pod learner.
 
 Drop-in entry point (paper Listing 2): `from repro import cairl`.
+Vectorised entry point: `repro.make_vec(id, num_envs)` — one constructor
+over every pool backend (repro.pool).
+
+Exports resolve lazily (PEP 562) so `import repro` stays cheap and
+submodules keep importing in any order.
 """
+
+#: public surface of the bare `repro` package (tests/test_api_surface.py)
+__all__ = ["cairl", "make", "make_compat", "make_vec", "registered", "spec"]
+
+_LAZY = {
+    "make_vec": ("repro.pool", "make_vec"),
+    "make": ("repro.core.registry", "make"),
+    "make_compat": ("repro.core.registry", "make_compat"),
+    "spec": ("repro.core.registry", "spec"),
+    "registered": ("repro.core.registry", "registered"),
+}
+
+
+def __getattr__(name):
+    if name == "cairl":
+        import importlib
+
+        return importlib.import_module("repro.cairl")
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

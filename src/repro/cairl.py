@@ -2,10 +2,14 @@
 
 `make` returns the stateful Gym-compatible shim (reset/step/render), matching
 the paper's migration story: change one import line, keep the experiment code.
-For compiled fast paths use `cairl.make_functional` + `cairl.rollout`.
+For compiled fast paths use `cairl.make_functional` + `cairl.rollout`, or go
+straight to `cairl.make_vec(id, num_envs)` — the unified vector frontend over
+every pool backend. `cairl.spec(id)` exposes the declarative `EnvSpec`
+(transform pipeline, tags, time limit) behind each registered id.
 """
 from repro.core.registry import make_compat as make  # noqa: F401  (Gym drop-in)
 from repro.core.registry import make as make_functional  # noqa: F401
-from repro.core.registry import registered  # noqa: F401
+from repro.core.registry import registered, spec, spec_of  # noqa: F401
 from repro.core.runner import rollout, rollout_random  # noqa: F401
-from repro.pool import EnvPool, HostPool, ShardedEnvPool, make_pool  # noqa: F401
+from repro.pool import (EnvPool, HostPool, ShardedEnvPool,  # noqa: F401
+                        make_pool, make_vec)

@@ -1,6 +1,10 @@
 """CaiRL core: the paper's contribution as a composable JAX module."""
+from repro.core import pipeline
 from repro.core.env import Env, Timestep
-from repro.core.registry import make, make_compat, register, registered
+from repro.core.pipeline import Transform, build_pipeline, declared_pipeline
+from repro.core.registry import (EnvSpec, make, make_compat, register,
+                                 register_family, register_spec, registered,
+                                 spec, spec_of, specs)
 from repro.core.runner import PythonRunner, Trajectory, episode_return, rollout, rollout_random
 from repro.core.spaces import Box, Discrete, MultiDiscrete, Space
 from repro.core.wrappers import (
@@ -15,7 +19,10 @@ from repro.core.wrappers import (
 )
 
 __all__ = [
-    "Env", "Timestep", "make", "make_compat", "register", "registered",
+    "Env", "EnvSpec", "Timestep", "Transform", "build_pipeline",
+    "declared_pipeline", "make", "make_compat", "pipeline", "register",
+    "register_family", "register_spec", "registered", "spec", "spec_of",
+    "specs",
     "PythonRunner", "Trajectory", "episode_return", "rollout", "rollout_random",
     "Box", "Discrete", "MultiDiscrete", "Space",
     "AutoReset", "FlattenObs", "FrameStack", "ObsToPixels", "RewardScale",

@@ -42,6 +42,10 @@ class Env:
 
     observation_space: Space
     action_space: Space
+    #: the declarative `EnvSpec` this env was built from, when it came out of
+    #: the registry (`repro.core.registry.make` sets it on the outermost
+    #: layer; `registry.spec_of` walks wrapper stacks to find it).
+    spec = None
 
     # -- core API ------------------------------------------------------------
     def reset(self, key: jax.Array) -> Tuple[Any, jax.Array]:

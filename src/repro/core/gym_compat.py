@@ -49,13 +49,20 @@ class GymCompat:
     `(obs, reward, terminated, truncated, info)`, mapping the functional
     core's `info["truncated"]` signal (core/wrappers.TimeLimit); the default
     stays the classic 4-tuple with folded `done`.
+
+    Modern-Gym parity: `.spec` exposes the declarative `EnvSpec` the env
+    was built from (None for hand-composed stacks), and `render_mode` is
+    accepted/stored for call-site compatibility — rendering is always the
+    on-device `render()` -> frame path, whatever the mode says.
     """
 
-    def __init__(self, env: Env, seed: int = 0, new_step_api: bool = False):
+    def __init__(self, env: Env, seed: int = 0, new_step_api: bool = False,
+                 render_mode: Optional[str] = None):
         self._env = env
         self._key = jax.random.PRNGKey(seed)
         self._state: Any = None
         self.new_step_api = bool(new_step_api)
+        self.render_mode = render_mode
         self._rng = np.random.default_rng(seed)
         self.observation_space = _SpaceShim(env.observation_space, self._rng)
         self.action_space = _SpaceShim(env.action_space, self._rng)
@@ -103,6 +110,14 @@ class GymCompat:
 
     def action_space_sample(self):
         return self.action_space.sample()
+
+    @property
+    def spec(self):
+        """The declarative `EnvSpec` behind this env (modern `gym.Env.spec`
+        parity); None when the wrapped stack was composed by hand."""
+        from repro.core.registry import spec_of
+
+        return spec_of(self._env)
 
     @property
     def unwrapped(self) -> Env:

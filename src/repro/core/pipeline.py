@@ -1,0 +1,146 @@
+"""Declarative env pipelines — wrapper composition as data.
+
+An `EnvSpec` (core/registry.py) describes an environment id as
+`core_factory` + a tuple of `Transform`s. A Transform is the *data* of one
+wrapper application — `TimeLimit(500)` instead of the built
+`TimeLimit(env, 500)` — so the same declaration can be
+
+  - built into the wrapper stack (`build_pipeline`),
+  - queried without building anything (`spec.max_steps`, docs generation),
+  - and *walked* by the fused megastep engine (kernels/envstep/ops.py):
+    each Transform carries its fusion role in `fusion`, so the kernel
+    dispatcher reads the declared pipeline instead of reverse-engineering
+    wrapper stacks with isinstance heuristics (the old `_peel`).
+
+Built wrapper stacks stay reconstructible: `declared_pipeline(env)` maps a
+stack back to `(core, transforms)` — exactly inverse to `build_pipeline` —
+via the wrapper↔transform table below. Third-party wrappers opt in by
+exposing a `transform` property returning their Transform (or `None` to
+mark themselves opaque to fusion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional, Tuple, Type
+
+from repro.core import wrappers as _w
+from repro.core.env import Env
+
+#: fusion roles the megastep planner understands (kernels/envstep/ops.py)
+FUSION_TIME_LIMIT = "time_limit"
+FUSION_PIXELS = "pixels"
+FUSION_FRAME_STACK = "frame_stack"
+
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """One declarative wrapper application. Frozen, hashable, reconstructible.
+
+    Subclasses declare the wrapper class they build and (optionally) the
+    fusion role the megastep planner should read; dataclass fields must
+    match the wrapper's constructor kwargs so `build` is pure data->code.
+    """
+
+    wrapper: ClassVar[Type[_w.Wrapper]]
+    fusion: ClassVar[Optional[str]] = None
+
+    def build(self, env: Env) -> Env:
+        return self.wrapper(env, **{f.name: getattr(self, f.name)
+                                    for f in dataclasses.fields(self)})
+
+    def __repr__(self) -> str:
+        args = ", ".join(f"{f.name}={getattr(self, f.name)!r}"
+                         for f in dataclasses.fields(self))
+        return f"{type(self).__name__}({args})"
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class TimeLimit(Transform):
+    """Truncate episodes at `max_steps` (wrappers.TimeLimit)."""
+
+    max_steps: int
+    wrapper = _w.TimeLimit
+    fusion = FUSION_TIME_LIMIT
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class ObsToPixels(Transform):
+    """Observe the rendered framebuffer (wrappers.ObsToPixels)."""
+
+    wrapper = _w.ObsToPixels
+    fusion = FUSION_PIXELS
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class FrameStack(Transform):
+    """Stack the last `num_frames` observations (wrappers.FrameStack)."""
+
+    num_frames: int = 4
+    wrapper = _w.FrameStack
+    fusion = FUSION_FRAME_STACK
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class FlattenObs(Transform):
+    """Flatten observations to a 1-D Box (wrappers.FlattenObs)."""
+
+    wrapper = _w.FlattenObs
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class RewardScale(Transform):
+    """Scale rewards by a static factor (wrappers.RewardScale)."""
+
+    scale: float
+    wrapper = _w.RewardScale
+
+
+def build_pipeline(env: Env, transforms: Tuple[Transform, ...]) -> Env:
+    """Apply transforms innermost-first: `(TimeLimit(500), ObsToPixels(),
+    FrameStack(4))` builds `FrameStack(ObsToPixels(TimeLimit(env, 500)), 4)`.
+    """
+    for t in transforms:
+        env = t.build(env)
+    return env
+
+
+#: built wrapper -> its Transform (the reconstructible-from-data contract)
+_FROM_WRAPPER = {
+    _w.TimeLimit: lambda w: TimeLimit(w.max_steps),
+    _w.ObsToPixels: lambda w: ObsToPixels(),
+    _w.FrameStack: lambda w: FrameStack(w.num_frames),
+    _w.FlattenObs: lambda w: FlattenObs(),
+    _w.RewardScale: lambda w: RewardScale(w.scale),
+}
+
+
+def transform_of(wrapper: _w.Wrapper) -> Optional[Transform]:
+    """The Transform that rebuilds `wrapper`, or None if it is opaque.
+
+    A wrapper class outside core/wrappers.py participates by exposing a
+    `transform` property returning its Transform.
+    """
+    custom = getattr(wrapper, "transform", None)
+    if custom is not None:
+        return custom
+    fn = _FROM_WRAPPER.get(type(wrapper))
+    return fn(wrapper) if fn is not None else None
+
+
+def declared_pipeline(env: Env):
+    """Walk a built stack back to `(core_env, transforms)` (innermost-first).
+
+    Inverse of `build_pipeline` for stacks made of reconstructible wrappers;
+    returns `(None, None)` when any wrapper in the stack is opaque (the
+    fused planner then treats the whole stack as unfusable). Execution-layer
+    wrappers (`AutoReset`, `Vec`) are not pipeline transforms and also mark
+    the stack opaque — they are applied by pools, not declared by specs.
+    """
+    transforms = []
+    while isinstance(env, _w.Wrapper):
+        t = transform_of(env)
+        if t is None:
+            return None, None
+        transforms.append(t)
+        env = env.env
+    return env, tuple(reversed(transforms))

@@ -1,23 +1,152 @@
-"""Environment registry — the `cairl.make("CartPole-v1")` entry point.
+"""Environment registry — declarative `EnvSpec` pipelines behind `make()`.
 
 Paper Listing 2: switching a Gym experiment to CaiRL is a one-line change
-(`gym.make` -> `cairl.make`). `make()` returns the *functional* env;
-`make_compat()` returns the stateful Gym-API shim (core/gym_compat.py) for
-literal drop-in use.
+(`gym.make` -> `cairl.make`). Every registered id is an `EnvSpec`: a core
+env factory plus a declarative transform pipeline (core/pipeline.py), so
+one entry describes what used to be a hand-built wrapper-stack lambda —
+and the same declaration feeds `make()`, the fused megastep planner
+(kernels/envstep), the conformance matrix (tests/test_conformance.py) and
+the generated docs. `register_family` emits the conventional
+`-v<N>`/`-px`/`-raw` id trio from one call.
+
+`make()` returns the *functional* env; `make_compat()` returns the stateful
+Gym-API shim (core/gym_compat.py) for literal drop-in use. `spec(id)` is
+the queryable metadata API; the built env also carries its spec
+(`env.spec`, reachable through wrappers with `spec_of`).
+
+Back-compat: `register(name, factory)` with an opaque zero-to-kwargs
+factory still works — it becomes a single-id `EnvSpec` with an empty
+declared pipeline (such ids build and run everywhere, but the fused engine
+falls back to walking their built wrapper stack).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, FrozenSet, Optional, Tuple
 
+from repro.core import pipeline as P
 from repro.core.env import Env
 
-_REGISTRY: Dict[str, Callable[..., Env]] = {}
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Declarative recipe for one registry id: core factory + pipeline."""
+
+    id: str
+    core_factory: Callable[..., Env]
+    transforms: Tuple[P.Transform, ...] = ()
+    tags: FrozenSet[str] = frozenset()
+    #: default kwargs for `core_factory`, overridable per `make()` call
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def max_steps(self) -> Optional[int]:
+        """The declared TimeLimit, if any — no building required."""
+        for t in self.transforms:
+            if isinstance(t, P.TimeLimit):
+                return t.max_steps
+        return None
+
+    @property
+    def pixels(self) -> bool:
+        """True when the declared observation is the rendered framebuffer."""
+        return any(isinstance(t, P.ObsToPixels) for t in self.transforms)
+
+    def make(self, **kwargs) -> Env:
+        merged = dict(self.kwargs)
+        merged.update(kwargs)
+        _check_kwargs(self.id, self.core_factory, merged)
+        try:
+            env = self.core_factory(**merged)
+        except TypeError as e:
+            # Opaque factories (**kw lambdas) dodge the signature check;
+            # still name the id and offending kwargs instead of a bare
+            # TypeError from deep inside the stack.
+            raise TypeError(
+                f"cannot build {self.id!r} with kwargs {sorted(merged)}: {e}"
+            ) from e
+        env = P.build_pipeline(env, self.transforms)
+        env.spec = self
+        return env
+
+    def __repr__(self) -> str:  # pragma: no cover
+        tf = ", ".join(repr(t) for t in self.transforms)
+        return f"EnvSpec({self.id!r}, {_factory_name(self.core_factory)}, ({tf}))"
 
 
-def register(name: str, factory: Callable[..., Env]) -> None:
-    if name in _REGISTRY:
-        raise ValueError(f"environment {name!r} already registered")
-    _REGISTRY[name] = factory
+def _factory_name(factory) -> str:
+    return getattr(factory, "__name__", repr(factory))
+
+
+def _check_kwargs(env_id: str, factory, kwargs: Dict[str, Any]) -> None:
+    """Reject unknown construction kwargs with a message naming them."""
+    if not kwargs:
+        return
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):  # builtins / exotic callables: best effort
+        return
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return  # **kwargs factories accept anything statically
+    accepted = [n for n, p in params.items()
+                if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                              inspect.Parameter.KEYWORD_ONLY)]
+    unknown = sorted(set(kwargs) - set(accepted))
+    if unknown:
+        raise TypeError(
+            f"unknown kwargs {unknown} for environment {env_id!r} "
+            f"({_factory_name(factory)} accepts: {accepted or 'no kwargs'})")
+
+
+_REGISTRY: Dict[str, EnvSpec] = {}
+
+
+def register_spec(spec: EnvSpec) -> EnvSpec:
+    if spec.id in _REGISTRY:
+        raise ValueError(f"environment {spec.id!r} already registered")
+    _REGISTRY[spec.id] = spec
+    return spec
+
+
+def register(name: str, factory: Callable[..., Env], *,
+             transforms: Tuple[P.Transform, ...] = (),
+             tags: FrozenSet[str] = frozenset()) -> EnvSpec:
+    """Register one id. With only `(name, factory)` this is the legacy
+    third-party API — the factory may build any wrapper stack itself."""
+    return register_spec(EnvSpec(name, factory, tuple(transforms),
+                                 frozenset(tags)))
+
+
+def register_family(name: str, core_factory: Callable[..., Env], *,
+                    max_steps: int, version: int = 0, obs: str = "state",
+                    pixel_variant: bool = False, num_frames: int = 4,
+                    tags=(), kwargs: Dict[str, Any] = None) -> Tuple[EnvSpec, ...]:
+    """One entry per family: derive the conventional id trio.
+
+      - `{name}-v{version}`: TimeLimit(max_steps); with `obs="pixels"` the
+        arcade pipeline TimeLimit -> ObsToPixels -> FrameStack(num_frames).
+      - `{name}-px` (when `pixel_variant`): the pixel pipeline over the
+        same core (the gridworld `-px` mode).
+      - `{name}-raw`: the bare core env for custom composition (CaiRL's
+        `Flatten<TimeLimit<200, CartPoleEnv>>()` template style).
+    """
+    if obs not in ("state", "pixels"):
+        raise ValueError(f"obs must be 'state' or 'pixels', got {obs!r}")
+    base = frozenset(tags)
+    kw = tuple(sorted((kwargs or {}).items()))
+    pixel_tf = (P.TimeLimit(max_steps), P.ObsToPixels(),
+                P.FrameStack(num_frames))
+    main_tf = pixel_tf if obs == "pixels" else (P.TimeLimit(max_steps),)
+    main_tags = base | ({"pixels"} if obs == "pixels" else set())
+    out = [register_spec(EnvSpec(f"{name}-v{version}", core_factory, main_tf,
+                                 main_tags, kw))]
+    if pixel_variant:
+        out.append(register_spec(EnvSpec(f"{name}-px", core_factory, pixel_tf,
+                                         base | {"pixels"}, kw)))
+    out.append(register_spec(EnvSpec(f"{name}-raw", core_factory, (),
+                                     base | {"raw"}, kw)))
+    return tuple(out)
 
 
 def registered() -> list:
@@ -25,23 +154,48 @@ def registered() -> list:
     return sorted(_REGISTRY)
 
 
-def make(name: str, **kwargs) -> Env:
-    """Build a functional env by registry id (e.g. "CartPole-v1")."""
+def spec(name: str) -> EnvSpec:
+    """The declarative `EnvSpec` behind a registered id (queryable API)."""
     _ensure_builtins()
     if name not in _REGISTRY:
         raise KeyError(f"unknown environment {name!r}; known: {registered()}")
-    return _REGISTRY[name](**kwargs)
+    return _REGISTRY[name]
 
 
-def make_compat(name: str, seed: int = 0, new_step_api: bool = False, **kwargs):
+def specs() -> Tuple[EnvSpec, ...]:
+    """Every registered `EnvSpec`, id-sorted — the registry as a test matrix."""
+    return tuple(_REGISTRY[n] for n in registered())
+
+
+def make(name: str, **kwargs) -> Env:
+    """Build a functional env by registry id (e.g. "CartPole-v1")."""
+    return spec(name).make(**kwargs)
+
+
+def spec_of(env) -> Optional[EnvSpec]:
+    """Find the `EnvSpec` an env was built from, walking wrapper layers
+    (e.g. through the `Vec(AutoReset(...))` stacks pools add)."""
+    while env is not None:
+        s = getattr(env, "spec", None)
+        if s is not None:
+            return s
+        env = getattr(env, "env", None)
+    return None
+
+
+def make_compat(name: str, seed: int = 0, new_step_api: bool = False,
+                render_mode: Optional[str] = None, **kwargs):
     """Gym drop-in: stateful reset()/step()/render() object (Listing 2).
 
     `new_step_api=True` returns the Gym >= 0.26 5-tuple
     `(obs, reward, terminated, truncated, info)` from `step`.
+    `render_mode` is accepted for modern-Gym call-site compatibility; all
+    rendering here is on-device `render()` -> frame, so it is ignored.
     """
     from repro.core.gym_compat import GymCompat
 
-    return GymCompat(make(name, **kwargs), seed=seed, new_step_api=new_step_api)
+    return GymCompat(make(name, **kwargs), seed=seed, new_step_api=new_step_api,
+                     render_mode=render_mode)
 
 
 _BUILTINS_LOADED = False

@@ -1,65 +1,51 @@
 """Built-in environments. Importing this module registers the Gym-named ids.
 
-Registered ids mirror Gym's, with Gym's default TimeLimit wrapping, so
-`cairl.make("CartPole-v1")` is behaviourally a drop-in (paper Listing 2).
+One `register_family` call per family (core/registry.py): the declarative
+`EnvSpec` pipeline derives the `-v<N>` (Gym's default TimeLimit wrapping, so
+`cairl.make("CartPole-v1")` is behaviourally a drop-in — paper Listing 2),
+`-px` (arcade pixel pipeline) and `-raw` (bare core for custom composition,
+CaiRL's `Flatten<TimeLimit<200, CartPoleEnv>>()` template style) variants.
+Arcade `-v0` ids *observe* pixels (4 stacked 84×84 on-device renders, paper
+§IV-C); their `-raw` twins expose the state vector ("virtual Flash memory").
 """
-from repro.core.registry import register
-from repro.core.wrappers import FrameStack, ObsToPixels, TimeLimit
+from repro.core.registry import register_family
 from repro.envs.arcade import Breakout, Pong
 from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
 from repro.envs.grid import CliffWalk, FrozenLake, Maze, Snake
 from repro.envs.multitask import Multitask
 from repro.envs.puzzle import LightsOut
 
-register("CartPole-v1", lambda **kw: TimeLimit(CartPole(**kw), 500))
-register("Acrobot-v1", lambda **kw: TimeLimit(Acrobot(**kw), 500))
-register("MountainCar-v0", lambda **kw: TimeLimit(MountainCar(**kw), 200))
-register("Pendulum-v1", lambda **kw: TimeLimit(Pendulum(**kw), 200))
-register("Multitask-v0", lambda **kw: TimeLimit(Multitask(**kw), 1000))
-register("LightsOut-v0", lambda **kw: TimeLimit(LightsOut(**kw), 100))
+# Classic control (Gym ids, Gym's default TimeLimits).
+register_family("CartPole", CartPole, max_steps=500, version=1,
+                tags=("classic",))
+register_family("Acrobot", Acrobot, max_steps=500, version=1,
+                tags=("classic",))
+register_family("MountainCar", MountainCar, max_steps=200, tags=("classic",))
+register_family("Pendulum", Pendulum, max_steps=200, version=1,
+                tags=("classic",))
+
+# The paper's flagship Flash game (§IV-C) and puzzle runtime (§IV-D).
+register_family("Multitask", Multitask, max_steps=1000, tags=("flash",))
+register_family("LightsOut", LightsOut, max_steps=100, tags=("puzzle",))
 
 # Arcade pixel games (paper §IV-C): observations are 4 stacked 84×84 frames
 # rendered on device by kernels/raster — the raw-pixels mode end to end.
-register("Pong-v0",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Pong(**kw), 1000)), 4))
-register("Breakout-v0",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Breakout(**kw), 1000)),
-                                 4))
+register_family("Pong", Pong, max_steps=1000, obs="pixels", tags=("arcade",))
+register_family("Breakout", Breakout, max_steps=1000, obs="pixels",
+                tags=("arcade",))
 
 # Procedural gridworld suite (envs/grid): the level layout is regenerated
 # per episode from the AutoReset key chain. `-v0` ids observe the cell-code
 # grid (the layout IS the observation, MultiDiscrete); `-px` ids observe 4
 # stacked 84×84 on-device renders of the same scene (arcade pixel pipeline).
-register("FrozenLake-v0", lambda **kw: TimeLimit(FrozenLake(**kw), 100))
-register("CliffWalk-v0", lambda **kw: TimeLimit(CliffWalk(**kw), 100))
-register("Snake-v0", lambda **kw: TimeLimit(Snake(**kw), 200))
-register("Maze-v0", lambda **kw: TimeLimit(Maze(**kw), 200))
-register("FrozenLake-px",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(FrozenLake(**kw), 100)),
-                                 4))
-register("CliffWalk-px",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(CliffWalk(**kw), 100)),
-                                 4))
-register("Snake-px",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Snake(**kw), 200)), 4))
-register("Maze-px",
-         lambda **kw: FrameStack(ObsToPixels(TimeLimit(Maze(**kw), 200)), 4))
-
-# Raw (unwrapped) variants for custom composition, mirroring CaiRL's
-# template-composition style: Flatten<TimeLimit<200, CartPoleEnv>>().
-# Arcade `-raw` ids expose the state-vector ("virtual Flash memory") obs.
-register("CartPole-raw", CartPole)
-register("Acrobot-raw", Acrobot)
-register("MountainCar-raw", MountainCar)
-register("Pendulum-raw", Pendulum)
-register("Multitask-raw", Multitask)
-register("LightsOut-raw", LightsOut)
-register("Pong-raw", Pong)
-register("Breakout-raw", Breakout)
-register("FrozenLake-raw", FrozenLake)
-register("CliffWalk-raw", CliffWalk)
-register("Snake-raw", Snake)
-register("Maze-raw", Maze)
+register_family("FrozenLake", FrozenLake, max_steps=100, pixel_variant=True,
+                tags=("grid",))
+register_family("CliffWalk", CliffWalk, max_steps=100, pixel_variant=True,
+                tags=("grid",))
+register_family("Snake", Snake, max_steps=200, pixel_variant=True,
+                tags=("grid",))
+register_family("Maze", Maze, max_steps=200, pixel_variant=True,
+                tags=("grid",))
 
 __all__ = ["Acrobot", "Breakout", "CartPole", "CliffWalk", "FrozenLake",
            "MountainCar", "Maze", "Pendulum", "Multitask", "LightsOut",

@@ -8,14 +8,17 @@ implementation for the registered classic-control + puzzle envs.
 
 Structure mirrors kernels/raster and kernels/attention: megastep.py
 (pl.pallas_call + BlockSpec), ref.py (pure-jnp oracle), ops.py (dispatching
-wrapper with an interpret=True CPU mode), specs.py (per-env row dynamics).
+wrapper with an interpret=True CPU mode), specs.py (per-env row dynamics;
+the row *layout* is auto-derived from a traced reset — `derive_layout`).
 """
 from repro.kernels.envstep.megastep import fused_transition, megastep_pallas
 from repro.kernels.envstep.ops import env_megastep, fused_step, supports
 from repro.kernels.envstep.ref import megastep_ref
-from repro.kernels.envstep.specs import FusedSpec, lookup
+from repro.kernels.envstep.specs import (FusedSpec, derive_layout, lookup,
+                                         spec_for)
 
 __all__ = [
-    "FusedSpec", "env_megastep", "fused_step", "fused_transition", "lookup",
-    "megastep_pallas", "megastep_ref", "supports",
+    "FusedSpec", "derive_layout", "env_megastep", "fused_step",
+    "fused_transition", "lookup", "megastep_pallas", "megastep_ref",
+    "spec_for", "supports",
 ]

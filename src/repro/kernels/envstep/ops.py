@@ -9,7 +9,11 @@ takes the *batched autoreset state* exactly as `Vec(AutoReset(env))` carries
 it, precomputes the auto-reset key chain and fresh reset states with the
 identical `jax.random` call sequence `AutoReset.step` makes per step (so the
 threefry stream is bit-exact against the vmap path), flattens the state to
-rows, launches the kernel, and rebuilds the state pytree.
+rows, launches the kernel, and rebuilds the state pytree. Which parts of
+the stack fuse how is read off the *declared* pipeline (core/pipeline.py):
+every wrapper is a reconstructible transform carrying its fusion role, so
+the planner (`_plan`) walks data instead of reverse-engineering wrapper
+stacks with isinstance heuristics.
 
 Pixel stacks (`FrameStack(ObsToPixels(core))` / `ObsToPixels(core)`, arcade
 suite) fuse too, when the core spec's obs rows are its state rows
@@ -62,25 +66,37 @@ def env_megastep(step_rows, state, actions, fresh, fresh_obs, *,
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def _peel(env):
-    """Split a pixel wrapper stack from its row-fusable core.
+def _plan(env):
+    """Read the fusion plan off the stack's *declared* pipeline.
 
-    Returns (core_env, num_stack, pixels): `core_env` is the
-    `TimeLimit(base)` / bare-base stack `lookup()` understands, `num_stack`
-    the FrameStack depth (None if absent), `pixels` whether an ObsToPixels
-    sits over the core. (None, None, False) marks an unfusable stack shape.
+    Walks `pipeline.declared_pipeline(env)` — wrappers are reconstructible
+    transforms carrying their fusion role (`Transform.fusion`) — and accepts
+    the one shape the kernel models: `[TimeLimit] [ObsToPixels [FrameStack]]`
+    over a base env. Returns (core_env_stack, num_stack, pixels) where
+    `core_env_stack` is the TimeLimit(base)/bare-base sub-stack `lookup()`
+    resolves, or (None, None, False) for anything the plan can't express
+    (opaque wrappers, FrameStack without pixels, reordered transforms).
     """
-    from repro.core.wrappers import FrameStack, ObsToPixels
+    from repro.core import pipeline as P
 
-    num_stack = None
-    if isinstance(env, FrameStack):
-        num_stack = env.num_frames
-        env = env.env
-    if isinstance(env, ObsToPixels):
-        return env.env, num_stack, True
-    if num_stack is not None:  # FrameStack over non-pixel obs: not modelled
+    core, transforms = P.declared_pipeline(env)
+    if core is None:
         return None, None, False
-    return env, None, False
+    stack = list(transforms)  # innermost-first; env is the outermost wrapper
+    core_stack, num_stack, pixels = env, None, False
+    if stack and stack[-1].fusion == P.FUSION_FRAME_STACK:
+        num_stack = stack.pop().num_frames
+        core_stack = core_stack.env
+    if stack and stack[-1].fusion == P.FUSION_PIXELS:
+        pixels = True
+        stack.pop()
+        core_stack = core_stack.env
+    elif num_stack is not None:  # FrameStack over non-pixel obs: not modelled
+        return None, None, False
+    if stack and not (len(stack) == 1
+                      and stack[0].fusion == P.FUSION_TIME_LIMIT):
+        return None, None, False  # anything besides an inner TimeLimit
+    return core_stack, num_stack, pixels
 
 
 def _pixel_fusable(spec, core) -> bool:
@@ -90,7 +106,7 @@ def _pixel_fusable(spec, core) -> bool:
 def supports(env) -> bool:
     """True if `env` (base, TimeLimit(base), or a pixel wrapper stack over
     them) has a fused megastep execution path."""
-    core, _, pixels = _peel(env)
+    core, _, pixels = _plan(env)
     if core is None:
         return False
     found = lookup(core)
@@ -143,7 +159,7 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
     from repro.core.wrappers import (AutoResetState, FrameStackState,
                                      TimeLimitState)
 
-    core, num_stack, pixels = _peel(env)
+    core, num_stack, pixels = _plan(env)
     found = lookup(core) if core is not None else None
     if found is None or (pixels and not _pixel_fusable(found[0], core)):
         raise NotImplementedError(

@@ -7,21 +7,33 @@ all B lanes with pure element-wise VPU ops. The same `step_rows` body runs
 inside the Pallas megastep kernel (megastep.py) and the pure-jnp reference
 (ref.py), so kernel and oracle share one dynamics implementation.
 
-Every formula here mirrors the canonical env module (envs/classic/*,
-envs/puzzle.py) operation-for-operation — parity with the vmap path is a
-test contract (tests/test_envstep_fused.py), not an aspiration. Integer
-state (LightsOut board, press counters) rides in float32 rows; the values
-are small integers, so the round-trip through f32 is exact.
+Only the *dynamics* (`step_rows`) is written by hand — every formula mirrors
+the canonical env module (envs/classic/*, envs/grid/*, envs/arcade/*,
+envs/puzzle.py) operation-for-operation; parity with the vmap path is a test
+contract (tests/test_conformance.py), not an aspiration. The *layout*
+(state/obs row counts, flatten/unflatten between the state pytree and the
+row matrix) is derived automatically by `derive_layout` from a traced
+`reset` of the env: field order, shapes and dtypes come from the state
+NamedTuple itself, so a new env needs only its `step_rows` math, not a
+hand-maintained field table. Integer state (boards, counters, cell indices)
+rides in float32 rows; the values are small integers, so the round-trip
+through f32 is exact. An env whose dynamics index rows in a different order
+than its state fields declares a `field_order` override (Snake: the age
+grid is field 0 but the dynamics put the scalars first).
 
-Registry: `lookup(env)` unwraps an optional outer TimeLimit and returns
-`(spec, max_steps)` for supported base envs, else None.
+Registry: `spec_for(core_env)` derives the spec for a supported base env;
+`lookup(env)` additionally accepts a single declared `TimeLimit` over it
+and returns `(spec, max_steps)`, else None.
 """
 from __future__ import annotations
 
+import functools
+import weakref
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class FusedSpec(NamedTuple):
@@ -40,33 +52,76 @@ class FusedSpec(NamedTuple):
     # obs rows == state rows (obs = flattened base state). When True and the
     # base env has a capsule `scene()`, pixel wrapper stacks
     # (ObsToPixels / FrameStack) can run fused too: the kernel steps the
-    # row-major game logic, and frames are rasterised per-chunk from the
-    # per-step obs rows outside the fused body (ops.fused_step).
+    # row-major game logic, and frames are rasterised per-chunk outside the
+    # fused body (ops.fused_step).
     obs_is_state: bool = False
 
 
-def _row(x: jax.Array) -> jax.Array:
-    """(..., B) leaf -> (..., 1, B) row."""
-    return x[..., None, :]
+class FusedDynamics(NamedTuple):
+    """What a fused env must declare by hand: the row math, and nothing else.
+
+    `step_rows_factory(env)` closes over static config (board size etc.) and
+    returns the `step_rows` body. Layout is derived; `field_order` overrides
+    the row order only when the dynamics index rows in a different order
+    than the state NamedTuple declares its fields.
+    """
+
+    step_rows_factory: Callable[[Any], Callable]
+    obs_is_state: bool = False
+    field_order: Optional[Tuple[str, ...]] = None
 
 
-def _stack_rows(leaves) -> jax.Array:
-    """[(..., B)] leaves -> (..., S, B) rows (batch stays on the lane dim)."""
-    return jnp.stack(leaves, axis=-2).astype(jnp.float32)
+# -- derived layout ----------------------------------------------------------
+
+def derive_layout(env, field_order: Optional[Tuple[str, ...]] = None):
+    """Introspect a traced `reset`: (state_size, obs_size, flatten, unflatten).
+
+    The state NamedTuple's fields — in declaration order, or `field_order` —
+    become consecutive row blocks of `prod(field_shape)` rows each; the
+    batch dimension stays on the trailing (lane) axis. `flatten` accepts any
+    leading dims before the batch axis (the (K, B, ...) fresh-reset stacks
+    `ops.fused_step` scans out), `unflatten` is its exact inverse on `(S, B)`
+    rows, restoring per-field shapes and dtypes.
+    """
+    state_s, obs_s = jax.eval_shape(env.reset, jax.random.PRNGKey(0))
+    cls = type(state_s)
+    fields = tuple(state_s._fields)
+    order = tuple(field_order) if field_order is not None else fields
+    if sorted(order) != sorted(fields):
+        raise ValueError(f"field_order {order} != state fields {fields}")
+    shapes = {f: tuple(getattr(state_s, f).shape) for f in fields}
+    dtypes = {f: getattr(state_s, f).dtype for f in fields}
+    sizes = {f: int(np.prod(shapes[f], dtype=int)) for f in fields}
+    state_size = sum(sizes.values())
+    obs_size = int(np.prod(obs_s.shape, dtype=int))
+
+    def flatten(state) -> jax.Array:
+        rows = []
+        for f in order:
+            leaf = getattr(state, f)
+            lead = leaf.shape[: leaf.ndim - len(shapes[f])]
+            rows.append(jnp.swapaxes(
+                jnp.reshape(leaf, lead + (sizes[f],)), -1, -2))
+        return jnp.concatenate(rows, axis=-2).astype(jnp.float32)
+
+    def unflatten(rows: jax.Array):
+        parts, offset = {}, 0
+        for f in order:
+            block = jnp.swapaxes(rows[offset:offset + sizes[f]], -1, -2)
+            offset += sizes[f]
+            parts[f] = jnp.reshape(
+                block, block.shape[:-1] + shapes[f]).astype(dtypes[f])
+        return cls(**parts)
+
+    return state_size, obs_size, flatten, unflatten
 
 
 # -- CartPole ----------------------------------------------------------------
 
-def _cartpole_spec(env) -> FusedSpec:
+def _cartpole_rows(env) -> Callable:
     from repro.envs.classic.cartpole import (
-        CartPoleState, FORCE_MAG, GRAVITY, LENGTH, MASSPOLE, POLEMASS_LENGTH,
-        TAU, THETA_THRESHOLD, TOTAL_MASS, X_THRESHOLD)
-
-    def flatten(s: CartPoleState) -> jax.Array:
-        return _stack_rows([s.x, s.x_dot, s.theta, s.theta_dot])
-
-    def unflatten(rows: jax.Array) -> CartPoleState:
-        return CartPoleState(rows[0], rows[1], rows[2], rows[3])
+        FORCE_MAG, GRAVITY, LENGTH, MASSPOLE, POLEMASS_LENGTH, TAU,
+        THETA_THRESHOLD, TOTAL_MASS, X_THRESHOLD)
 
     def step_rows(rows, act):
         x, x_dot = rows[0:1], rows[1:2]
@@ -87,22 +142,14 @@ def _cartpole_spec(env) -> FusedSpec:
                 | (jnp.abs(nth) > THETA_THRESHOLD)).astype(jnp.float32)
         return new, new, jnp.ones_like(done), done
 
-    return FusedSpec("CartPole", 4, 4, flatten, unflatten, step_rows,
-                     obs_is_state=True)
+    return step_rows
 
 
 # -- MountainCar -------------------------------------------------------------
 
-def _mountain_car_spec(env) -> FusedSpec:
+def _mountain_car_rows(env) -> Callable:
     from repro.envs.classic.mountain_car import (
-        FORCE, GOAL_POS, GOAL_VEL, GRAVITY, MAX_POS, MAX_SPEED, MIN_POS,
-        MountainCarState)
-
-    def flatten(s: MountainCarState) -> jax.Array:
-        return _stack_rows([s.position, s.velocity])
-
-    def unflatten(rows: jax.Array) -> MountainCarState:
-        return MountainCarState(rows[0], rows[1])
+        FORCE, GOAL_POS, GOAL_VEL, GRAVITY, MAX_POS, MAX_SPEED, MIN_POS)
 
     def step_rows(rows, act):
         pos, vel = rows[0:1], rows[1:2]
@@ -114,21 +161,14 @@ def _mountain_car_spec(env) -> FusedSpec:
         done = ((npos >= GOAL_POS) & (nv >= GOAL_VEL)).astype(jnp.float32)
         return new, new, -jnp.ones_like(done), done
 
-    return FusedSpec("MountainCar", 2, 2, flatten, unflatten, step_rows,
-                     obs_is_state=True)
+    return step_rows
 
 
 # -- Pendulum ----------------------------------------------------------------
 
-def _pendulum_spec(env) -> FusedSpec:
+def _pendulum_rows(env) -> Callable:
     from repro.envs.classic.pendulum import (
-        DT, G, L, M, MAX_SPEED, MAX_TORQUE, PendulumState, _angle_normalize)
-
-    def flatten(s: PendulumState) -> jax.Array:
-        return _stack_rows([s.theta, s.theta_dot])
-
-    def unflatten(rows: jax.Array) -> PendulumState:
-        return PendulumState(rows[0], rows[1])
+        DT, G, L, M, MAX_SPEED, MAX_TORQUE, _angle_normalize)
 
     def step_rows(rows, act):
         th, thdot = rows[0:1], rows[1:2]
@@ -142,21 +182,14 @@ def _pendulum_spec(env) -> FusedSpec:
         done = jnp.zeros_like(u)
         return new, obs, -costs, done
 
-    return FusedSpec("Pendulum", 2, 3, flatten, unflatten, step_rows)
+    return step_rows
 
 
 # -- Acrobot -----------------------------------------------------------------
 
-def _acrobot_spec(env) -> FusedSpec:
+def _acrobot_rows(env) -> Callable:
     from repro.envs.classic.acrobot import (
-        AcrobotState, DT, G, I1, I2, L1, LC1, LC2, M1, M2, MAX_VEL_1,
-        MAX_VEL_2)
-
-    def flatten(s: AcrobotState) -> jax.Array:
-        return _stack_rows([s.theta1, s.theta2, s.dtheta1, s.dtheta2])
-
-    def unflatten(rows: jax.Array) -> AcrobotState:
-        return AcrobotState(rows[0], rows[1], rows[2], rows[3])
+        DT, G, I1, I2, L1, LC1, LC2, M1, M2, MAX_VEL_1, MAX_VEL_2)
 
     def dsdt(s, torque):
         theta1, theta2 = s[0:1], s[1:2]
@@ -198,28 +231,14 @@ def _acrobot_spec(env) -> FusedSpec:
              dth1, dth2], axis=0)
         return new, obs, reward, done
 
-    return FusedSpec("Acrobot", 4, 6, flatten, unflatten, step_rows)
+    return step_rows
 
 
 # -- LightsOut ---------------------------------------------------------------
 
-def _lightsout_spec(env) -> FusedSpec:
-    from repro.envs.puzzle import LightsOutState
-
+def _lightsout_rows(env) -> Callable:
     n = env.n
     m = n * n
-
-    def flatten(s: LightsOutState) -> jax.Array:
-        board = s.board.reshape(s.board.shape[:-2] + (m,))
-        rows = jnp.swapaxes(board, -1, -2).astype(jnp.float32)
-        return jnp.concatenate([rows, _row(s.t).astype(jnp.float32)], axis=-2)
-
-    def unflatten(rows: jax.Array) -> LightsOutState:
-        board = jnp.swapaxes(rows[:m], -1, -2)
-        b = board.shape[0]
-        return LightsOutState(
-            board.reshape(b, n, n).astype(jnp.int32),
-            rows[m].astype(jnp.int32))
 
     def step_rows(rows, act):
         board, t = rows[:m], rows[m:m + 1]
@@ -237,7 +256,7 @@ def _lightsout_spec(env) -> FusedSpec:
         new = jnp.concatenate([nb, t + 1.0], axis=0)
         return new, nb, reward, done
 
-    return FusedSpec("LightsOut", m + 1, m, flatten, unflatten, step_rows)
+    return step_rows
 
 
 # -- Grid suite (envs/grid) --------------------------------------------------
@@ -272,20 +291,10 @@ def _cell_iota(m):
     return jax.lax.broadcasted_iota(jnp.float32, (m, 1), 0)
 
 
-def _frozen_lake_spec(env) -> FusedSpec:
-    from repro.envs.grid.frozen_lake import GOAL_REWARD, FrozenLakeState
+def _frozen_lake_rows(env) -> Callable:
+    from repro.envs.grid.frozen_lake import GOAL_REWARD
 
     n, m = env.n, env.m
-
-    def flatten(s: FrozenLakeState) -> jax.Array:
-        holes = jnp.swapaxes(s.holes, -1, -2).astype(jnp.float32)
-        return jnp.concatenate([_row(s.pos).astype(jnp.float32), holes],
-                               axis=-2)
-
-    def unflatten(rows: jax.Array) -> FrozenLakeState:
-        return FrozenLakeState(
-            rows[0].astype(jnp.int32),
-            jnp.swapaxes(rows[1:1 + m], -1, -2).astype(jnp.int32))
 
     def step_rows(rows, act):
         pos, holes = rows[0:1], rows[1:1 + m]
@@ -301,25 +310,14 @@ def _frozen_lake_spec(env) -> FusedSpec:
         new = jnp.concatenate([npos, holes], axis=0)
         return new, codes, reward, done
 
-    return FusedSpec("FrozenLake", 1 + m, m, flatten, unflatten, step_rows)
+    return step_rows
 
 
-def _cliff_walk_spec(env) -> FusedSpec:
-    from repro.envs.grid.cliff_walk import (CLIFF_REWARD, STEP_REWARD,
-                                            CliffWalkState)
+def _cliff_walk_rows(env) -> Callable:
+    from repro.envs.grid.cliff_walk import CLIFF_REWARD, STEP_REWARD
 
     n_rows, n_cols, m = env.n_rows, env.n_cols, env.m
     start = float(env.start)
-
-    def flatten(s: CliffWalkState) -> jax.Array:
-        cliff = jnp.swapaxes(s.cliff, -1, -2).astype(jnp.float32)
-        return jnp.concatenate([_row(s.pos).astype(jnp.float32), cliff],
-                               axis=-2)
-
-    def unflatten(rows: jax.Array) -> CliffWalkState:
-        return CliffWalkState(
-            rows[0].astype(jnp.int32),
-            jnp.swapaxes(rows[1:1 + m], -1, -2).astype(jnp.int32))
 
     def step_rows(rows, act):
         pos, cliff = rows[0:1], rows[1:1 + m]
@@ -336,23 +334,13 @@ def _cliff_walk_spec(env) -> FusedSpec:
         new = jnp.concatenate([new_pos, cliff], axis=0)
         return new, codes, reward, goal
 
-    return FusedSpec("CliffWalk", 1 + m, m, flatten, unflatten, step_rows)
+    return step_rows
 
 
-def _maze_spec(env) -> FusedSpec:
-    from repro.envs.grid.maze import GOAL_REWARD, MazeState
+def _maze_rows(env) -> Callable:
+    from repro.envs.grid.maze import GOAL_REWARD
 
     n, m = env.n, env.m
-
-    def flatten(s: MazeState) -> jax.Array:
-        walls = jnp.swapaxes(s.walls, -1, -2).astype(jnp.float32)
-        return jnp.concatenate(
-            [_stack_rows([s.pos, s.goal]), walls], axis=-2)
-
-    def unflatten(rows: jax.Array) -> MazeState:
-        return MazeState(
-            rows[0].astype(jnp.int32), rows[1].astype(jnp.int32),
-            jnp.swapaxes(rows[2:2 + m], -1, -2).astype(jnp.int32))
 
     def step_rows(rows, act):
         pos, goal, walls = rows[0:1], rows[1:2], rows[2:2 + m]
@@ -368,30 +356,13 @@ def _maze_spec(env) -> FusedSpec:
         new = jnp.concatenate([npos, goal, walls], axis=0)
         return new, codes, reward, done
 
-    return FusedSpec("Maze", 2 + m, m, flatten, unflatten, step_rows)
+    return step_rows
 
 
-def _snake_spec(env) -> FusedSpec:
-    from repro.envs.grid.snake import (DEATH_REWARD, EAT_REWARD, PHI,
-                                       SnakeState)
+def _snake_rows(env) -> Callable:
+    from repro.envs.grid.snake import DEATH_REWARD, EAT_REWARD, PHI
 
     n, m = env.n, env.m
-
-    def flatten(s: SnakeState) -> jax.Array:
-        ages = jnp.swapaxes(s.ages, -1, -2).astype(jnp.float32)
-        prio = jnp.swapaxes(s.prio, -1, -2).astype(jnp.float32)
-        return jnp.concatenate(
-            [_stack_rows([s.head, s.food, s.length, s.eaten]), ages, prio],
-            axis=-2)
-
-    def unflatten(rows: jax.Array) -> SnakeState:
-        return SnakeState(
-            ages=jnp.swapaxes(rows[4:4 + m], -1, -2).astype(jnp.int32),
-            head=rows[0].astype(jnp.int32),
-            food=rows[1].astype(jnp.int32),
-            length=rows[2].astype(jnp.int32),
-            eaten=rows[3].astype(jnp.int32),
-            prio=jnp.swapaxes(rows[4 + m:4 + 2 * m], -1, -2))
 
     def step_rows(rows, act):
         head, food = rows[0:1], rows[1:2]
@@ -434,22 +405,14 @@ def _snake_spec(env) -> FusedSpec:
                                prio], axis=0)
         return new, codes, reward, done
 
-    return FusedSpec("Snake", 4 + 2 * m, m, flatten, unflatten, step_rows)
+    return step_rows
 
 
 # -- Pong --------------------------------------------------------------------
 
-def _pong_spec(env) -> FusedSpec:
+def _pong_rows(env) -> Callable:
     from repro.envs.arcade.pong import (
-        MAX_VY, OPP_SPEED, OPP_X, PADDLE_HALF, PADDLE_SPEED, PLAYER_X,
-        PongState, SPIN)
-
-    def flatten(s: PongState) -> jax.Array:
-        return _stack_rows([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy,
-                            s.player_y, s.opp_y])
-
-    def unflatten(rows: jax.Array) -> PongState:
-        return PongState(rows[0], rows[1], rows[2], rows[3], rows[4], rows[5])
+        MAX_VY, OPP_SPEED, OPP_X, PADDLE_HALF, PADDLE_SPEED, PLAYER_X, SPIN)
 
     def step_rows(rows, act):
         x, y = rows[0:1], rows[1:2]
@@ -481,32 +444,17 @@ def _pong_spec(env) -> FusedSpec:
         done = ((nx < 0.0) | (nx > 1.0)).astype(jnp.float32)
         return new, new, reward, done
 
-    return FusedSpec("Pong", 6, 6, flatten, unflatten, step_rows,
-                     obs_is_state=True)
+    return step_rows
 
 
 # -- Breakout ----------------------------------------------------------------
 
-def _breakout_spec(env) -> FusedSpec:
+def _breakout_rows(env) -> Callable:
     from repro.envs.arcade.breakout import (
-        BRICK_COLS, BRICK_H, BRICK_ROWS, BRICK_TOP, BreakoutState,
-        CLEAR_BONUS, MAX_VX, PADDLE_HALF, PADDLE_SPEED, PADDLE_Y, SPIN)
+        BRICK_COLS, BRICK_H, BRICK_ROWS, BRICK_TOP, CLEAR_BONUS, MAX_VX,
+        PADDLE_HALF, PADDLE_SPEED, PADDLE_Y, SPIN)
 
     m = BRICK_ROWS * BRICK_COLS
-
-    def flatten(s: BreakoutState) -> jax.Array:
-        board = s.bricks.reshape(s.bricks.shape[:-2] + (m,))
-        board_rows = jnp.swapaxes(board, -1, -2).astype(jnp.float32)
-        return jnp.concatenate(
-            [_stack_rows([s.ball_x, s.ball_y, s.ball_vx, s.ball_vy,
-                          s.paddle_x]), board_rows], axis=-2)
-
-    def unflatten(rows: jax.Array) -> BreakoutState:
-        board = jnp.swapaxes(rows[5:5 + m], -1, -2)
-        b = board.shape[0]
-        return BreakoutState(
-            rows[0], rows[1], rows[2], rows[3], rows[4],
-            board.reshape(b, BRICK_ROWS, BRICK_COLS).astype(jnp.int32))
 
     def step_rows(rows, act):
         x, y = rows[0:1], rows[1:2]
@@ -548,47 +496,85 @@ def _breakout_spec(env) -> FusedSpec:
         new = jnp.concatenate([nx, ny, vx, vy, px, new_board], axis=0)
         return new, new, reward, done
 
-    return FusedSpec("Breakout", 5 + m, 5 + m, flatten, unflatten, step_rows,
-                     obs_is_state=True)
+    return step_rows
 
 
 # -- registry ----------------------------------------------------------------
 
-def _factories():
+@functools.lru_cache(maxsize=None)
+def _dynamics():
     from repro.envs.arcade import Breakout, Pong
     from repro.envs.classic import Acrobot, CartPole, MountainCar, Pendulum
     from repro.envs.grid import CliffWalk, FrozenLake, Maze, Snake
     from repro.envs.puzzle import LightsOut
 
     return {
-        CartPole: _cartpole_spec,
-        MountainCar: _mountain_car_spec,
-        Pendulum: _pendulum_spec,
-        Acrobot: _acrobot_spec,
-        LightsOut: _lightsout_spec,
-        Pong: _pong_spec,
-        Breakout: _breakout_spec,
-        FrozenLake: _frozen_lake_spec,
-        CliffWalk: _cliff_walk_spec,
-        Maze: _maze_spec,
-        Snake: _snake_spec,
+        CartPole: FusedDynamics(_cartpole_rows, obs_is_state=True),
+        MountainCar: FusedDynamics(_mountain_car_rows, obs_is_state=True),
+        Pendulum: FusedDynamics(_pendulum_rows),
+        Acrobot: FusedDynamics(_acrobot_rows),
+        LightsOut: FusedDynamics(_lightsout_rows),
+        Pong: FusedDynamics(_pong_rows, obs_is_state=True),
+        Breakout: FusedDynamics(_breakout_rows, obs_is_state=True),
+        FrozenLake: FusedDynamics(_frozen_lake_rows),
+        CliffWalk: FusedDynamics(_cliff_walk_rows),
+        Maze: FusedDynamics(_maze_rows),
+        # The dynamics put the scalar rows (head, food, length, eaten)
+        # before the grids; the state NamedTuple declares `ages` first.
+        Snake: FusedDynamics(_snake_rows, field_order=(
+            "head", "food", "length", "eaten", "ages", "prio")),
     }
+
+
+#: per-instance memo of derived specs: one env instance is probed/looked-up
+#: repeatedly (pool construction, then every fused_step trace), and the
+#: `jax.eval_shape` reset trace behind `derive_layout` is not free. Weak
+#: keys so cached entries die with their env.
+_SPEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def spec_for(env) -> Optional[FusedSpec]:
+    """Derive the `FusedSpec` for a supported *base* env, else None."""
+    try:
+        return _SPEC_CACHE[env]
+    except (KeyError, TypeError):  # miss, or an unhashable/unweakref env
+        pass
+    dyn = _dynamics().get(type(env))
+    if dyn is None:
+        spec = None
+    else:
+        state_size, obs_size, flatten, unflatten = derive_layout(
+            env, dyn.field_order)
+        spec = FusedSpec(type(env).__name__, state_size, obs_size, flatten,
+                         unflatten, dyn.step_rows_factory(env),
+                         dyn.obs_is_state)
+    try:
+        _SPEC_CACHE[env] = spec
+    except TypeError:
+        pass
+    return spec
 
 
 def lookup(env) -> Optional[Tuple[FusedSpec, Optional[int]]]:
     """(spec, max_steps) for `env` = base or TimeLimit(base), else None.
 
-    Only the exact stacks the pool builds (`TimeLimit(base)` from the `-v*`
-    registry ids, bare `base` from the `-raw` ids) are fusable; any other
-    wrapper changes step semantics the kernel doesn't model.
+    The stack is read through its declared pipeline (core/pipeline.py) —
+    only a bare base (the `-raw` ids) or a single TimeLimit over it (the
+    `-v*` ids) is row-fusable; any other transform changes step semantics
+    the kernel doesn't model (pixel stacks are planned one level up, in
+    ops.fused_step).
     """
-    from repro.core.wrappers import TimeLimit
+    from repro.core.pipeline import TimeLimit, declared_pipeline
 
-    max_steps = None
-    if isinstance(env, TimeLimit):
-        max_steps = env.max_steps
-        env = env.env
-    factory = _factories().get(type(env))
-    if factory is None:
+    core, transforms = declared_pipeline(env)
+    if core is None:
         return None
-    return factory(env), max_steps
+    max_steps = None
+    if transforms:
+        if len(transforms) != 1 or not isinstance(transforms[0], TimeLimit):
+            return None
+        max_steps = transforms[0].max_steps
+    spec = spec_for(core)
+    if spec is None:
+        return None
+    return spec, max_steps

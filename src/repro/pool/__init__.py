@@ -2,51 +2,109 @@
 
 The canonical way to run every env in the repo:
 
+  - `make_vec`       : THE frontend. One constructor, one shared protocol;
+                       returns the right pool for the request.
   - `EnvPool`        : XLA-resident batched pool, Gym-style reset/step plus
                        a pure `xla()` API for in-graph use (docs/pool.md).
   - `ShardedEnvPool` : same API, batch sharded over a device mesh.
   - `HostPool`       : same API over interpreted host envs (the paper's
                        foreign-runtime stand-ins), threaded + double-buffered.
-  - `make_pool`      : registry-id factory over all three backends.
+  - `make_pool`      : legacy registry-id factory (kept for back-compat;
+                       new code should call `make_vec`).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
+from repro.core.env import Env, supports_fused_step
+from repro.core.registry import make as registry_make
 from repro.core.spaces import sample_batch
 from repro.pool.envpool import (EnvPool, FUSED_BACKENDS, PoolState, PoolStep,
                                 XlaPool)
 from repro.pool.host import HostPool
 from repro.pool.sharded import ShardedEnvPool, default_pool_mesh
 
+#: step-engine names `make_vec` accepts (besides "auto")
+STEP_BACKENDS = ("vmap",) + FUSED_BACKENDS
+
+
+def make_vec(env: Union[str, Env], num_envs: int, *, backend: str = "auto",
+             mesh=None, host: bool = False, unroll: int = 1,
+             num_workers: Optional[int] = None, **env_kwargs):
+    """Unified vector frontend: `make_vec(id, num_envs)` -> the right pool.
+
+    One constructor over every execution engine, all behind the shared
+    pool protocol (`reset/step`, `xla()`, `rollout`):
+
+      - default               -> `EnvPool` (XLA-resident, single process)
+      - `mesh=...`            -> `ShardedEnvPool` over that device mesh
+      - `host=True`           -> `HostPool` of interpreted baselines
+
+    `backend` picks the step engine: "auto" resolves to the fused megastep
+    kernel ("pallas": Pallas on TPU, row-major jnp elsewhere) whenever the
+    declared pipeline supports it and to the scanned vmap step otherwise;
+    pass "vmap", "pallas", "pallas_interpret" or "jnp" to pin one. `unroll`
+    is the fused chunk depth (steps per kernel launch) for `rollout` /
+    `step_many` consumers.
+
+    `env_kwargs` go to the registry (`repro.core.registry.make`), so
+    construction errors name the id and the offending kwargs.
+    """
+    if host:
+        if not isinstance(env, str):
+            raise ValueError("host=True builds interpreted baselines and "
+                             "needs a registry id, not an Env instance")
+        if mesh is not None:
+            raise ValueError("host=True and mesh=... are mutually exclusive")
+        if env_kwargs:
+            raise ValueError(
+                f"env_kwargs {sorted(env_kwargs)} cannot be applied with "
+                "host=True: interpreted baselines (envs.baseline_python) are "
+                "fixed default-config ports, and silently dropping the kwargs "
+                "would compare differently-configured envs")
+        return HostPool(env, num_envs, num_workers=num_workers)
+    if isinstance(env, str):
+        env = registry_make(env, **env_kwargs)
+    elif env_kwargs:
+        raise ValueError(f"env_kwargs {sorted(env_kwargs)} only apply when "
+                         "building from a registry id, not an Env instance")
+    if backend == "auto":
+        backend = "pallas" if supports_fused_step(env) else "vmap"
+    elif backend not in STEP_BACKENDS:
+        raise ValueError(f"unknown step backend {backend!r}; expected 'auto' "
+                         f"or one of {STEP_BACKENDS}")
+    if mesh is not None:
+        return ShardedEnvPool(env, num_envs, mesh=mesh, backend=backend,
+                              unroll=unroll)
+    return EnvPool(env, num_envs, backend=backend, unroll=unroll)
+
 
 def make_pool(name: str, num_envs: int, backend: str = "xla",
               mesh=None, step_backend: str = "vmap", unroll: int = 1,
               **env_kwargs):
-    """Build a pool for a registered env id.
+    """Legacy pool factory (pre-`make_vec` API), kept as a thin shim.
 
     backend: "xla"/"vmap" (EnvPool) | "pallas"/"pallas_interpret"/"jnp"
-    (EnvPool on the fused megastep engine, `unroll` steps per kernel launch)
-    | "sharded" (ShardedEnvPool; combine with `step_backend="pallas"` for
-    the shard_mapped megastep engine) | "host" (HostPool, interpreted
-    baseline_python port — only ids with a baseline).
+    (EnvPool on the fused megastep engine) | "sharded" (ShardedEnvPool,
+    combine with `step_backend=`) | "host" (HostPool).
     """
     if backend in ("xla", "vmap"):
-        return EnvPool(name, num_envs, backend=step_backend, unroll=unroll,
-                       **env_kwargs)
+        return make_vec(name, num_envs, backend=step_backend, unroll=unroll,
+                        **env_kwargs)
     if backend in FUSED_BACKENDS:
-        return EnvPool(name, num_envs, backend=backend, unroll=unroll,
-                       **env_kwargs)
+        return make_vec(name, num_envs, backend=backend, unroll=unroll,
+                        **env_kwargs)
     if backend == "sharded":
-        return ShardedEnvPool(name, num_envs, mesh=mesh, backend=step_backend,
-                              unroll=unroll, **env_kwargs)
+        return make_vec(name, num_envs, mesh=mesh or default_pool_mesh(),
+                        backend=step_backend, unroll=unroll, **env_kwargs)
     if backend == "host":
-        return HostPool(name, num_envs)
+        return make_vec(name, num_envs, host=True)
     raise ValueError(f"unknown pool backend {backend!r}; expected 'xla', "
                      f"'sharded', 'host' or one of {FUSED_BACKENDS}")
 
 
 __all__ = [
-    "EnvPool", "FUSED_BACKENDS", "ShardedEnvPool", "HostPool", "PoolState",
-    "PoolStep", "XlaPool", "sample_batch", "default_pool_mesh", "make_pool",
+    "EnvPool", "FUSED_BACKENDS", "STEP_BACKENDS", "ShardedEnvPool",
+    "HostPool", "PoolState", "PoolStep", "XlaPool", "sample_batch",
+    "default_pool_mesh", "make_pool", "make_vec",
 ]

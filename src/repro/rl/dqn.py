@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.env import Env
-from repro.pool import EnvPool, PoolState
+from repro.pool import PoolState, make_vec
 from repro.rl.networks import cnn_apply, cnn_init, mlp_apply, mlp_init
 from repro.rl.replay import ReplayState, replay_add_batch, replay_init, replay_sample
 from repro.train.optim import Adam, AdamState, huber_loss, linear_schedule
@@ -74,12 +74,13 @@ def _build_net(env: Env, cfg: DQNConfig, key):
 def _make_pool(env: Env, cfg: DQNConfig):
     """The pool's pure xla() handle on the configured step engine.
 
-    env_backend="pallas" routes every env transition through the fused
-    megastep kernel (one launch per train step) instead of the chain of
-    small vmap ops; trajectories — and therefore training — match "vmap"
-    up to float rounding (tests/test_envstep_fused.py).
+    Built through the unified `make_vec` frontend. env_backend="pallas"
+    routes every env transition through the fused megastep kernel (one
+    launch per train step) instead of the chain of small vmap ops;
+    trajectories — and therefore training — match "vmap" up to float
+    rounding (tests/test_envstep_fused.py).
     """
-    return EnvPool(env, cfg.num_envs, backend=cfg.env_backend).xla()
+    return make_vec(env, cfg.num_envs, backend=cfg.env_backend).xla()
 
 
 def dqn_init(env: Env, cfg: DQNConfig, key: jax.Array) -> Tuple[DQNState, Callable]:
@@ -253,7 +254,7 @@ def train_host(make_env_host, env_spec_env: Env, cfg: DQNConfig, steps: int, key
 def greedy_returns(env: Env, apply_fn, params, key: jax.Array, episodes: int = 8,
                    max_steps: int = 500) -> jax.Array:
     """Greedy evaluation over a batch of episodes (compiled, via the pool)."""
-    pool = EnvPool(env, episodes).xla()
+    pool = make_vec(env, episodes, backend="vmap").xla()
 
     @jax.jit
     def run(key):

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.env import Env
-from repro.pool import EnvPool, PoolState
+from repro.pool import PoolState, make_vec
 from repro.rl.networks import mlp_apply, mlp_init
 from repro.train.optim import Adam, AdamState
 
@@ -60,10 +60,11 @@ def ac_apply(params: ACParams, obs, activation="tanh"):
 
 
 def _make_pool(env: Env, cfg: PPOConfig):
-    """Pool handle on the configured step engine (see rl/dqn._make_pool):
-    with env_backend="pallas" each collected transition is one fused
-    megastep kernel launch instead of a chain of small vmap ops."""
-    return EnvPool(env, cfg.num_envs, backend=cfg.env_backend).xla()
+    """Pool handle on the configured step engine, via the unified `make_vec`
+    frontend (see rl/dqn._make_pool): with env_backend="pallas" each
+    collected transition is one fused megastep kernel launch instead of a
+    chain of small vmap ops."""
+    return make_vec(env, cfg.num_envs, backend=cfg.env_backend).xla()
 
 
 class PPOState(NamedTuple):

@@ -1,16 +1,20 @@
 """Registry-driven cross-backend conformance harness.
 
-Every id in `registry.registered()` is swept automatically — new env
-families inherit coverage instead of hand-listing it (the EnvPool lesson:
-the execution engine must be validated uniformly across every env it
-hosts). Per id:
+Every `EnvSpec` in the registry is swept automatically — new env families
+inherit coverage instead of hand-listing it (the EnvPool lesson: the
+execution engine must be validated uniformly across every env it hosts).
+The matrix iterates the *declarative* specs (`registry.specs()`), so
+metadata questions (is there a TimeLimit? is the obs pixels?) are answered
+from the declared pipeline, not by crawling built wrapper stacks. Per spec:
 
+  - declared pipeline integrity: the built stack walks back to exactly the
+    declared transforms, and carries its `EnvSpec`;
   - space contract: obs/action shapes + dtypes, `contains`, `sample_batch`;
-  - `info["truncated"]` contract: present iff a TimeLimit is in the stack;
+  - `info["truncated"]` contract: present iff a TimeLimit is declared;
   - AutoReset-after-done: episodes keep flowing across the reset boundary;
   - vmap vs fused (`jnp` reference + `pallas_interpret` kernel) bit-parity,
     including autoreset boundaries (grid ids regenerate their *level* there);
-  - pool parity: `EnvPool` fused rollout == vmap rollout;
+  - pool parity: `make_vec` fused rollout == vmap rollout;
   - interpreted-python parity: baselines with `set_state` must reproduce the
     compiled trajectory step for step from a shared state.
 
@@ -24,31 +28,28 @@ import numpy as np
 import pytest
 from conftest import assert_leaves_match, vmap_reference
 
-from repro.core import make, registered
+from repro.core import declared_pipeline, make, registered, spec, specs
 from repro.core.env import supports_fused_step
 from repro.core.spaces import Box, Discrete, MultiDiscrete, sample_batch
-from repro.core.wrappers import AutoReset, TimeLimit, Wrapper
+from repro.core.wrappers import AutoReset, TimeLimit
 from repro.envs.baseline_python import BASELINES
 from repro.kernels.envstep import fused_step
-from repro.pool import EnvPool
+from repro.pool import make_vec
 
-ALL_IDS = registered()
+ALL_SPECS = specs()
+ALL_IDS = [s.id for s in ALL_SPECS]
 FUSED_IDS = [n for n in ALL_IDS if supports_fused_step(make(n))]
 #: ids with an interpreted twin that supports `set_state` (trajectory parity
 #: needs a shared start state) and a state-vector obs (pixel twins observe
 #: the state vector, not frames).
 BASELINE_IDS = [n for n in ALL_IDS
                 if n in BASELINES and hasattr(BASELINES[n], "set_state")
-                and len(make(n).observation_space.shape) == 1]
+                and not spec(n).pixels]
 BACKENDS = ("jnp", "pallas_interpret")
 
 
-def _has_time_limit(env) -> bool:
-    while isinstance(env, Wrapper):
-        if isinstance(env, TimeLimit):
-            return True
-        env = env.env
-    return False
+def _has_time_limit(name) -> bool:
+    return spec(name).max_steps is not None
 
 
 def _action_block(env, key, k: int, num_envs: int):
@@ -65,6 +66,20 @@ def _assert_in_space(space, obs, what=""):
 
 
 # -- fast per-id contract checks ---------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_declared_pipeline_round_trips(name):
+    """The built stack IS the declared pipeline: walking the wrappers back
+    through `declared_pipeline` recovers the spec's transforms exactly, and
+    the built env carries its `EnvSpec` (the queryable `.spec` contract)."""
+    s = spec(name)
+    env = make(name)
+    assert env.spec is s
+    core, transforms = declared_pipeline(env)
+    assert transforms == s.transforms, name
+    assert not hasattr(core, "env"), f"{name}: core still wrapped"
+    assert isinstance(core, s.core_factory), name
+
 
 @pytest.mark.parametrize("name", ALL_IDS)
 def test_space_contract(name):
@@ -88,13 +103,13 @@ def test_space_contract(name):
 
 @pytest.mark.parametrize("name", ALL_IDS)
 def test_truncated_info_contract(name):
-    """`info["truncated"]` is surfaced iff the stack carries a TimeLimit."""
+    """`info["truncated"]` is surfaced iff the spec declares a TimeLimit."""
     env = make(name)
     key = jax.random.PRNGKey(3)
     state, _ = env.reset(key)
     ts = env.step(state, env.action_space.sample(jax.random.fold_in(key, 1)),
                   jax.random.fold_in(key, 2))
-    if _has_time_limit(env):
+    if _has_time_limit(name):
         assert "truncated" in ts.info, name
         assert np.asarray(ts.info["truncated"]).dtype == np.bool_
     else:
@@ -150,14 +165,14 @@ def test_backend_parity(name, backend):
 @pytest.mark.slow
 @pytest.mark.parametrize("name", ALL_IDS)
 def test_pool_conformance(name):
-    """EnvPool hosts every id; fused-capable ids must match the vmap engine
-    through the pool's chunked rollout (including a remainder chunk)."""
+    """`make_vec` hosts every id; fused-capable ids must match the vmap
+    engine through the pool's chunked rollout (incl. a remainder chunk)."""
     key = jax.random.PRNGKey(7)
-    rew_v, eps_v, _ = EnvPool(name, 4).rollout(14, key)
+    rew_v, eps_v, _ = make_vec(name, 4, backend="vmap").rollout(14, key)
     assert np.all(np.isfinite(np.asarray(rew_v)))
     if name not in FUSED_IDS:
         return
-    rew_f, eps_f, _ = EnvPool(name, 4, backend="jnp", unroll=5).rollout(14, key)
+    rew_f, eps_f, _ = make_vec(name, 4, backend="jnp", unroll=5).rollout(14, key)
     np.testing.assert_allclose(np.asarray(rew_v), np.asarray(rew_f),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(eps_v), np.asarray(eps_f))

@@ -1,4 +1,5 @@
-"""GymCompat shim semantics: reseeding, the 5-tuple API, shim copyability."""
+"""GymCompat shim semantics: reseeding, the 5-tuple API, shim copyability,
+and modern-Gym drop-in parity (`.spec`, `render_mode=`)."""
 import copy
 import pickle
 
@@ -7,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import make_compat
+from repro.core import make_compat, spec
 from repro.core.gym_compat import GymCompat, _SpaceShim
 from repro.core.wrappers import TimeLimit
 from repro.envs.classic import CartPole, Pendulum
@@ -76,6 +77,34 @@ def test_space_shim_copy_deepcopy_pickle():
             s = clone.sample()
             assert np.asarray(s).shape == np.asarray(shim.sample()).shape
     assert e.action_space.n == 2  # attribute passthrough still works
+
+
+def test_spec_exposed_like_modern_gym():
+    """`e.spec` is the declarative EnvSpec of the registered id (modern
+    `gym.Env.spec` parity); hand-composed stacks report None."""
+    e = make_compat("CartPole-v1")
+    assert e.spec is spec("CartPole-v1")
+    assert e.spec.id == "CartPole-v1" and e.spec.max_steps == 500
+    hand = GymCompat(TimeLimit(CartPole(), 10))
+    assert hand.spec is None
+
+
+def test_render_mode_accepted_and_ignored():
+    """Modern Gym call-sites pass render_mode=; the shim accepts it, stores
+    it, and renders on device regardless."""
+    e = make_compat("CartPole-v1", render_mode="rgb_array")
+    assert e.render_mode == "rgb_array"
+    e.reset()
+    frame = e.render()
+    assert frame.shape == (84, 84)
+    assert make_compat("CartPole-v1").render_mode is None
+
+
+def test_render_mode_and_env_kwargs_coexist():
+    e = make_compat("LightsOut-v0", render_mode="human", n=4)
+    assert e.observation_space.shape == (16,)
+    with pytest.raises(TypeError, match="bogus"):
+        make_compat("CartPole-v1", render_mode="human", bogus=1)
 
 
 def test_space_shim_raises_attribute_error_for_missing():

@@ -165,6 +165,53 @@ def test_make_pool_backends():
         make_pool("CartPole-v1", 4, backend="jvm")
 
 
+def test_make_vec_frontend_dispatch():
+    """One constructor, the right pool: default EnvPool, mesh -> sharded,
+    host=True -> HostPool; backend="auto" resolves per fused support."""
+    from repro.core import make
+    from repro.pool import make_vec
+
+    pool = make_vec("CartPole-v1", 4)
+    assert type(pool) is EnvPool
+    assert pool.backend == "pallas"          # auto: CartPole fuses
+    assert make_vec("Multitask-v0", 4).backend == "vmap"  # auto: no spec
+    assert make_vec("CartPole-v1", 4, backend="vmap").backend == "vmap"
+    sharded = make_vec("CartPole-v1", 4, mesh=default_pool_mesh(1), unroll=3)
+    assert isinstance(sharded, ShardedEnvPool) and sharded.unroll == 3
+    host = make_vec("CartPole-v1", 2, host=True)
+    assert isinstance(host, HostPool) and len(host) == 2
+    # an Env instance works too (the rl/ learners construct this way)
+    assert type(make_vec(make("CartPole-v1"), 4)) is EnvPool
+
+
+def test_make_vec_frontend_errors():
+    from repro.core import make
+    from repro.pool import make_vec
+
+    with pytest.raises(ValueError, match="backend"):
+        make_vec("CartPole-v1", 4, backend="jvm")
+    with pytest.raises(ValueError, match="registry id"):
+        make_vec(make("CartPole-v1"), 4, host=True)
+    with pytest.raises(ValueError, match="env_kwargs"):
+        make_vec(make("CartPole-v1"), 4, n=5)
+    with pytest.raises(TypeError, match="bogus"):
+        make_vec("CartPole-v1", 4, bogus=1)  # registry names the bad kwarg
+    with pytest.raises(ValueError, match="host=True"):
+        # baselines are fixed-config ports; kwargs must not be dropped
+        make_vec("LightsOut-v0", 2, host=True, n=4)
+
+
+def test_make_vec_rollout_matches_envpool():
+    """The frontend is construction sugar only: same engine, same numbers."""
+    from repro.pool import make_vec
+
+    key = jax.random.PRNGKey(11)
+    rew_f, eps_f, _ = make_vec("Pendulum-v1", 4, backend="vmap").rollout(20, key)
+    rew_e, eps_e, _ = EnvPool("Pendulum-v1", 4).rollout(20, key)
+    np.testing.assert_array_equal(np.asarray(rew_f), np.asarray(rew_e))
+    np.testing.assert_array_equal(np.asarray(eps_f), np.asarray(eps_e))
+
+
 def test_pool_step_loop_is_device_resident():
     """Acceptance: no host transfers inside the compiled step loop (fig4)."""
     pool = EnvPool("CartPole-v1", 16)
