@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-conformance api-check bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-async test-conformance api-check bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,6 +21,14 @@ test-fast: api-check
 api-check:
 	$(PY) -m pytest -x -q tests/test_api_surface.py
 
+# Async env serving: the traffic-replay determinism harness, the shared
+# slot-table unit tests, and the async rows of the conformance/golden
+# sweeps (send/recv parity with the lock-step engine for every env id).
+test-async:
+	$(PY) -m pytest -x -q tests/test_async_pool.py tests/test_slots.py
+	$(PY) -m pytest -x -q tests/test_conformance.py tests/test_golden.py \
+		-k "async"
+
 # Registry-driven conformance: every registered env id × every backend
 # (python baseline / vmap / fused / pool) + the committed golden traces.
 # After an intentional dynamics change, regenerate the goldens with
@@ -34,11 +42,13 @@ test-conformance:
 bench-smoke: bench-json
 
 # Machine-readable perf record: fig1 (steps/s per backend, vmap vs fused
-# pallas megastep) and fig4 (batch/device scaling) in smoke mode.
+# pallas megastep), fig4 (batch/device scaling) and fig_async (continuous
+# slot refill vs lock-step wave serving) in smoke mode.
 bench-json:
 	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
 	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024 \
 		--json BENCH_fig4.json
+	$(PY) benchmarks/fig_async.py --smoke --json BENCH_fig_async.json
 
 # Full paper-figure reproduction (CSV to stdout; slow).
 bench:

@@ -60,7 +60,8 @@ class Env:
     # -- optional fused fast path --------------------------------------------
     def fused_step(self, state: Any, actions: jax.Array,
                    keys: jax.Array = None, num_steps: int = None, *,
-                   backend: str = "auto", batch_block: int = 128):
+                   backend: str = "auto", batch_block: int = 128,
+                   active: jax.Array = None):
         """Optional protocol hook: advance a *batched autoreset* state by
         `num_steps` fused env steps in one kernel launch.
 
@@ -69,7 +70,9 @@ class Env:
         is an optional per-step key array (ignored by action-deterministic
         envs). Returns `(new_state, Timestep)` with a leading step axis on
         the Timestep leaves — the stack `lax.scan` of the vmap step would
-        produce, bit-compatible with it.
+        produce, bit-compatible with it. `active` is an optional (B,) bool
+        lane mask (the async pool's masked chunk step): inactive lanes keep
+        their state and key chain and report zero outputs.
 
         The default implementation delegates to the Pallas megastep
         subsystem (repro.kernels.envstep) when this env has a registered
@@ -81,7 +84,7 @@ class Env:
 
         return _fused_step(self, state, actions, keys=keys,
                            num_steps=num_steps, backend=backend,
-                           batch_block=batch_block)
+                           batch_block=batch_block, active=active)
 
     # -- metadata ------------------------------------------------------------
     @property

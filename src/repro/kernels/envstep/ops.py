@@ -134,8 +134,34 @@ def _render_obs_rows(core, spec, obs_rows, backend):
     return frames.reshape(k, b, h, w)
 
 
+def _mask_inactive(old_state, new_state, ts, active):
+    """Masked-active lane gating (the serving/engine.py decode-slot pattern
+    applied to env lanes): rows where `active` is False keep their pre-chunk
+    state — including their AutoReset key chain, which must not advance for
+    a lane that did not step — and report zero reward / obs and done=False.
+    The kernel still computes every lane (SIMD lanes are paid for either
+    way); the select is what makes slot recycling in the async pool unable
+    to perturb neighbouring sessions."""
+    from repro.core.env import Timestep
+
+    act = jnp.asarray(active, bool)
+
+    def lane(n, o):  # state leaves: (B, ...)
+        return jnp.where(act.reshape(act.shape + (1,) * (n.ndim - 1)), n, o)
+
+    def out(n):      # per-step output leaves: (K, B, ...)
+        m = act.reshape((1,) + act.shape + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, jnp.zeros_like(n))
+
+    sel_state = jax.tree.map(lane, new_state, old_state)
+    info = {k: out(v) for k, v in ts.info.items()}
+    return sel_state, Timestep(state=sel_state, obs=out(ts.obs),
+                               reward=out(ts.reward), done=out(ts.done),
+                               info=info)
+
+
 def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
-               *, backend: str = "auto", batch_block: int = 128):
+               *, backend: str = "auto", batch_block: int = 128, active=None):
     """Advance a batched `AutoReset(env)` state by `num_steps` fused steps.
 
     env     : the single-env stack the pool holds — `TimeLimit(base)` / base,
@@ -148,6 +174,10 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
               with `Vec.step` and ignored — every fused env's dynamics are
               action-deterministic, and auto-reset randomness comes from the
               state's own key chain (like the vmap path).
+    active  : optional (B,) bool lane mask (the async pool's masked chunk
+              step): lanes where it is False keep their pre-chunk state and
+              key chain and report zero reward / done=False. Default None
+              steps every lane (lock-step).
 
     Returns `(new_state, ts)` where `ts` is a `Timestep` whose obs/reward/
     done/info leaves carry a leading (K, ...) step axis — the same stack
@@ -231,9 +261,11 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
         # values are small ints, exact through the f32 round-trip.
         odt = core.observation_space.dtype
         info["terminal_obs"] = jnp.swapaxes(tobs, -1, -2).astype(odt)
-        return new_state, Timestep(
+        out = new_state, Timestep(
             state=new_state, obs=jnp.swapaxes(obs, -1, -2).astype(odt),
             reward=reward, done=done_b, info=info)
+        return out if active is None else _mask_inactive(state, *out,
+                                                         active=active)
 
     # Pixel pipeline: rasterise the chunk's stepped (pre-reset) and fresh
     # frames in two batched on-device calls, then apply the frame-stack ring
@@ -260,5 +292,7 @@ def fused_step(env, state, actions, keys=None, num_steps: Optional[int] = None,
         new_inner = FrameStackState(inner, frames_t)
     new_state = AutoResetState(new_inner, final_keys)
     info["terminal_obs"] = tobs_px
-    return new_state, Timestep(state=new_state, obs=obs_px, reward=reward,
-                               done=done_b, info=info)
+    out = new_state, Timestep(state=new_state, obs=obs_px, reward=reward,
+                              done=done_b, info=info)
+    return out if active is None else _mask_inactive(state, *out,
+                                                     active=active)

@@ -7,6 +7,9 @@ The canonical way to run every env in the repo:
   - `EnvPool`        : XLA-resident batched pool, Gym-style reset/step plus
                        a pure `xla()` API for in-graph use (docs/pool.md).
   - `ShardedEnvPool` : same API, batch sharded over a device mesh.
+  - `AsyncEnvPool`   : async mode — `send(actions, ids)` / `recv()` step
+                       only ready lanes; sessions are spliced into free
+                       slots (continuous refill, docs/pool.md).
   - `HostPool`       : same API over interpreted host envs (the paper's
                        foreign-runtime stand-ins), threaded + double-buffered.
   - `make_pool`      : legacy registry-id factory (kept for back-compat;
@@ -19,12 +22,13 @@ from typing import Optional, Union
 from repro.core.env import Env, supports_fused_step
 from repro.core.registry import make as registry_make
 from repro.core.spaces import sample_batch
+from repro.pool.async_pool import AsyncEnvPool, AsyncUnsupportedError
 from repro.pool.envpool import (EnvPool, FUSED_BACKENDS, PoolState, PoolStep,
                                 XlaPool)
 from repro.pool.host import HostPool
 from repro.pool.sharded import ShardedEnvPool, default_pool_mesh
 
-#: step-engine names `make_vec` accepts (besides "auto")
+#: step-engine names `make_vec` accepts (besides "auto" and "async")
 STEP_BACKENDS = ("vmap",) + FUSED_BACKENDS
 
 
@@ -37,19 +41,27 @@ def make_vec(env: Union[str, Env], num_envs: int, *, backend: str = "auto",
     pool protocol (`reset/step`, `xla()`, `rollout`):
 
       - default               -> `EnvPool` (XLA-resident, single process)
+      - `backend="async"`     -> `AsyncEnvPool` (send/recv, continuous refill)
       - `mesh=...`            -> `ShardedEnvPool` over that device mesh
       - `host=True`           -> `HostPool` of interpreted baselines
 
     `backend` picks the step engine: "auto" resolves to the fused megastep
     kernel ("pallas": Pallas on TPU, row-major jnp elsewhere) whenever the
     declared pipeline supports it and to the scanned vmap step otherwise;
-    pass "vmap", "pallas", "pallas_interpret" or "jnp" to pin one. `unroll`
-    is the fused chunk depth (steps per kernel launch) for `rollout` /
-    `step_many` consumers.
+    pass "vmap", "pallas", "pallas_interpret" or "jnp" to pin one, or
+    "async" for the session-per-slot async pool (lanes step only when their
+    client has sent; `num_envs` becomes the slot count). `unroll` is the
+    fused chunk depth (steps per kernel launch) for `rollout` / `step_many`
+    consumers.
 
     `env_kwargs` go to the registry (`repro.core.registry.make`), so
     construction errors name the id and the offending kwargs.
     """
+    if backend == "async":
+        if mesh is not None or host:
+            raise ValueError("backend='async' is single-process and "
+                             "XLA-resident; mesh=/host= do not apply")
+        return AsyncEnvPool(env, num_envs, **env_kwargs)
     if host:
         if not isinstance(env, str):
             raise ValueError("host=True builds interpreted baselines and "
@@ -91,6 +103,8 @@ def make_pool(name: str, num_envs: int, backend: str = "xla",
     if backend in ("xla", "vmap"):
         return make_vec(name, num_envs, backend=step_backend, unroll=unroll,
                         **env_kwargs)
+    if backend == "async":
+        return make_vec(name, num_envs, backend="async", **env_kwargs)
     if backend in FUSED_BACKENDS:
         return make_vec(name, num_envs, backend=backend, unroll=unroll,
                         **env_kwargs)
@@ -104,7 +118,7 @@ def make_pool(name: str, num_envs: int, backend: str = "xla",
 
 
 __all__ = [
-    "EnvPool", "FUSED_BACKENDS", "STEP_BACKENDS", "ShardedEnvPool",
-    "HostPool", "PoolState", "PoolStep", "XlaPool", "sample_batch",
-    "default_pool_mesh", "make_pool", "make_vec",
+    "AsyncEnvPool", "AsyncUnsupportedError", "EnvPool", "FUSED_BACKENDS",
+    "STEP_BACKENDS", "ShardedEnvPool", "HostPool", "PoolState", "PoolStep",
+    "XlaPool", "sample_batch", "default_pool_mesh", "make_pool", "make_vec",
 ]

@@ -1,0 +1,336 @@
+"""AsyncEnvPool — EnvPool's async mode over the fused megastep engine.
+
+Lock-step pools step all B lanes together, so one slow consumer stalls the
+whole batch. AsyncEnvPool is the async mode of the EnvPool paper: clients
+`send(actions, ids)` for the lanes that are ready and `recv()` advances
+exactly those lanes. Internally the batch is a fixed table of *slots*
+(lanes), an `active` mask gates which slot rows move — the masked-active
+continuous-batching pattern serving/engine.py uses for decode slots — and
+departed sessions are recycled by splicing a freshly reset session's state
+into the freed slot rows. The whole lifecycle (masked step, slot splice,
+bulk reset) runs on the donated XLA-resident state pytree, so the
+zero-host-transfer property of the lock-step pool is preserved
+(benchmarks/fig_async.py certifies the compiled core's HLO).
+
+Sessions and determinism
+------------------------
+Each slot hosts one *session*: an independent AutoReset episode stream with
+its own key chain. `admit(seed=s)` seeds a lane exactly the way a 1-env
+lock-step `EnvPool.reset(seed=s)` seeds its only lane, and the masked step
+splits its step key across slots exactly the way `Vec.step` does. Two
+consequences, both load-bearing for the test suite:
+
+  - every fused env's dynamics are action-deterministic (randomness enters
+    only through the in-state AutoReset key chain), so a session's
+    trajectory is **bit-identical to the same seed run alone through the
+    lock-step pool**, no matter how other slots are scheduled or recycled
+    (tests/test_async_pool.py replays scripted traffic against that oracle);
+  - with every lane active, the lock-step facade (`reset(seed)` /
+    `step(actions)`) reproduces `EnvPool(..., backend="vmap")` exactly —
+    including key-dependent envs — which is what lets the async backend ride
+    the committed golden traces (tests/test_golden.py) and the conformance
+    matrix unchanged.
+
+Threading: `send` / `recv` are safe to call from many client threads;
+`recv(max_wait=, min_ready=)` blocks until at least `min_ready` lanes have
+actions staged (or the wait times out, stepping whatever is ready).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.env import Env, supports_fused_step
+from repro.core.registry import make as registry_make
+from repro.core.spaces import sample_batch
+from repro.core.wrappers import AutoReset
+
+
+class AsyncUnsupportedError(TypeError):
+    """Raised when an env cannot be hosted by the async pool.
+
+    Named (rather than a bare TypeError) so the registry-completeness sweep
+    can assert every id either builds or fails *loudly* with this error —
+    silent fallbacks would make `backend="async"` coverage unfalsifiable.
+    """
+
+
+class AsyncEnvPool:
+    """Session-per-slot async pool: `send(actions, ids)` / `recv() -> ids`.
+
+    >>> pool = AsyncEnvPool("CartPole-v1", num_slots=64)
+    >>> sid, obs = pool.admit(seed=7)            # splice a fresh session in
+    >>> pool.send(actions, ids=[sid])
+    >>> obs, rew, done, info, ids = pool.recv()  # only ready lanes stepped
+    >>> pool.release(sid)                        # free the slot for refill
+
+    Ids are slot indices (0..num_slots-1); the session-to-slot mapping for
+    *named* clients lives one level up in serving/env_service.EnvService.
+
+    backend: "auto" resolves to the fused megastep engine when the env
+    supports it ("pallas": Pallas on TPU, jnp rows elsewhere) and the
+    masked vmap step otherwise; "vmap"/"pallas"/"pallas_interpret"/"jnp"
+    pin one (same names as EnvPool).
+    """
+
+    def __init__(self, env: Union[Env, str], num_slots: int,
+                 backend: str = "auto", **env_kwargs):
+        if isinstance(env, str):
+            env = registry_make(env, **env_kwargs)
+        elif env_kwargs:
+            raise ValueError(f"env_kwargs {sorted(env_kwargs)} only apply "
+                             "when building from a registry id")
+        if not (hasattr(env, "reset") and hasattr(env, "observation_space")):
+            raise AsyncUnsupportedError(
+                f"async pool needs a functional Env (reset/step/spaces); "
+                f"got {type(env).__name__}")
+        self.env = env
+        self.num_slots = int(num_slots)
+        if self.num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if backend == "auto":
+            backend = "pallas" if supports_fused_step(env) else "vmap"
+        from repro.pool.envpool import FUSED_BACKENDS  # avoid import cycle
+
+        if backend in FUSED_BACKENDS:
+            if not supports_fused_step(env):
+                raise AsyncUnsupportedError(
+                    f"backend={backend!r} needs fused megastep support, but "
+                    f"{env.name} has none; use backend='vmap'")
+            self._kernel_backend = "auto" if backend == "pallas" else backend
+        elif backend == "vmap":
+            self._kernel_backend = None
+        else:
+            raise ValueError(f"unknown async step backend {backend!r}")
+        self.backend = backend
+        self.aenv = AutoReset(env)
+
+        self._cond = threading.Condition()
+        self._carry = None                       # (state pytree, obs), donated
+        self._active = np.zeros(self.num_slots, bool)
+        self._pending: Dict[int, np.ndarray] = {}  # slot -> staged action
+        self._key = None                         # facade step-key chain
+        self._recv_key = jax.random.PRNGKey(0x5C0)  # fallback recv key chain
+
+        self._jit_init = jax.jit(self._init_impl)
+        self._jit_admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._jit_step = jax.jit(self._step_impl, donate_argnums=(0,))
+
+    # -- spaces / metadata ---------------------------------------------------
+    @property
+    def observation_space(self):
+        return self.env.observation_space
+
+    @property
+    def action_space(self):
+        return self.env.action_space
+
+    @property
+    def num_envs(self) -> int:  # pool-protocol alias
+        return self.num_slots
+
+    def __len__(self) -> int:
+        return self.num_slots
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"AsyncEnvPool({self.env.name}, num_slots={self.num_slots}, "
+                f"active={int(self._active.sum())})")
+
+    @property
+    def active(self) -> np.ndarray:
+        """(num_slots,) bool — which lanes host a running session."""
+        return self._active.copy()
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.num_slots) if not self._active[i]]
+
+    # -- device programs -----------------------------------------------------
+    def _init_impl(self, key):
+        """Bulk reset, bit-identical to `EnvPool._xla_init`'s venv.reset."""
+        keys = jax.random.split(key, self.num_slots)
+        state, obs = jax.vmap(self.aenv.reset)(keys)
+        return state, obs
+
+    def _admit_impl(self, carry, lane_key, slot):
+        """Splice one freshly reset session into `slot`'s rows (the
+        prefill-into-slot move of serving/engine.py, for env lanes)."""
+        state, obs = carry
+        fresh_state, fresh_obs = self.aenv.reset(lane_key)
+        state = jax.tree.map(lambda full, one: full.at[slot].set(one),
+                             state, fresh_state)
+        obs = obs.at[slot].set(fresh_obs)
+        return (state, obs), fresh_obs
+
+    def _step_impl(self, carry, actions, active, key):
+        """One masked step: only `active` lanes advance; the rest keep their
+        state (and AutoReset key chain) and report zero outputs."""
+        state, obs = carry
+        if self._kernel_backend is not None:
+            new_state, ts = self.env.fused_step(
+                state, actions[None], num_steps=1,
+                backend=self._kernel_backend, active=active)
+            first = lambda x: x[0]
+            out = (ts.obs[0], ts.reward[0], ts.done[0],
+                   jax.tree.map(first, ts.info))
+            new_obs = jnp.where(
+                active.reshape(active.shape + (1,) * (ts.obs[0].ndim - 1)),
+                ts.obs[0], obs)
+            return (new_state, new_obs), out
+
+        keys = jax.random.split(key, self.num_slots)  # exactly Vec.step
+        ts = jax.vmap(self.aenv.step)(state, actions, keys)
+
+        def lane(n, o):
+            m = active.reshape(active.shape + (1,) * (n.ndim - 1))
+            return jnp.where(m, n, o)
+
+        new_state = jax.tree.map(lane, ts.state, state)
+        new_obs = lane(ts.obs, obs)
+        reward = jnp.where(active, ts.reward, jnp.zeros_like(ts.reward))
+        done = jnp.where(active, ts.done, jnp.zeros_like(ts.done))
+        info = jax.tree.map(lambda v: lane(v, jnp.zeros_like(v)), ts.info)
+        return (new_state, new_obs), (lane(ts.obs, jnp.zeros_like(ts.obs)),
+                                      reward, done, info)
+
+    def step_lowered(self):
+        """Lower (don't run) the masked-step core — for HLO inspection:
+        fig_async certifies it contains zero host-transfer instructions."""
+        self._ensure_carry()
+        acts = jnp.zeros((self.num_slots,) + tuple(self.action_space.shape),
+                         self.action_space.dtype)
+        return jax.jit(self._step_impl).lower(
+            self._carry, acts, jnp.zeros(self.num_slots, bool),
+            jax.random.PRNGKey(0))
+
+    # -- slot lifecycle ------------------------------------------------------
+    def _ensure_carry(self):
+        if self._carry is None:
+            self._carry = self._jit_init(jax.random.PRNGKey(0))
+
+    def admit(self, seed: Optional[int] = None, key=None,
+              slot: Optional[int] = None) -> Tuple[int, jax.Array]:
+        """Start a session in a free slot; returns `(slot_id, first_obs)`.
+
+        `seed=s` derives the lane key exactly as `EnvPool(env, 1).reset(s)`
+        derives its only lane's (so the session is bit-comparable to a solo
+        lock-step run); `key=` passes an explicit AutoReset reset key (the
+        golden-trace tests use this to mirror `Vec.reset`'s split).
+        """
+        if (seed is None) == (key is None):
+            raise ValueError("admit() takes exactly one of seed= or key=")
+        if key is None:
+            key = jax.random.split(jax.random.PRNGKey(seed), 1)[0]
+        with self._cond:
+            self._ensure_carry()
+            if slot is None:
+                free = self.free_slots()
+                if not free:
+                    raise RuntimeError("no free slot; release() a session "
+                                       "first (or queue in EnvService)")
+                slot = free[0]
+            elif self._active[slot]:
+                raise ValueError(f"slot {slot} already hosts a session")
+            self._carry, obs = self._jit_admit(self._carry, key,
+                                               jnp.asarray(slot, jnp.int32))
+            self._active[slot] = True
+            return slot, obs
+
+    def release(self, sid: int) -> None:
+        """End a session: free its slot for refill (state rows stay until the
+        next admit splices over them; the mask keeps them inert)."""
+        with self._cond:
+            if not self._active[sid]:
+                raise ValueError(f"slot {sid} has no running session")
+            self._active[sid] = False
+            self._pending.pop(sid, None)
+
+    # -- async API -----------------------------------------------------------
+    def send(self, actions, ids) -> None:
+        """Stage actions for lanes `ids` (one in-flight action per lane)."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        actions = np.asarray(actions)
+        if actions.shape[0] != ids.shape[0]:
+            raise ValueError(f"actions batch {actions.shape[0]} != "
+                             f"{ids.shape[0]} ids")
+        with self._cond:
+            for i, sid in enumerate(ids):
+                sid = int(sid)
+                if not self._active[sid]:
+                    raise ValueError(f"send to slot {sid}: no running session")
+                if sid in self._pending:
+                    raise ValueError(f"send to slot {sid}: action already "
+                                     "in flight; recv() first")
+                self._pending[sid] = actions[i]
+            self._cond.notify_all()
+
+    def recv(self, max_wait: Optional[float] = None, min_ready: int = 1,
+             key=None):
+        """Step every lane with a staged action: `(obs, rewards, dones,
+        infos, ids)`, each with leading dim len(ids) (slot-ascending).
+
+        `max_wait` (seconds) blocks until `min_ready` lanes are staged —
+        sends may come from other client threads; on timeout whatever is
+        ready is stepped. `max_wait=None` steps immediately and raises
+        RuntimeError if nothing is in flight (no deadlock in single-thread
+        use). `key` pins the per-step RNG stream (split across slots like
+        `Vec.step`; env dynamics that ignore keys are unaffected).
+        """
+        with self._cond:
+            if max_wait is not None:
+                self._cond.wait_for(
+                    lambda: len(self._pending) >= min_ready, timeout=max_wait)
+            if not self._pending:
+                raise RuntimeError("recv() with no actions in flight")
+            ids = np.array(sorted(self._pending), np.int64)
+            acts = np.zeros((self.num_slots,)
+                            + tuple(self.action_space.shape),
+                            self.action_space.dtype)
+            for sid in ids:
+                acts[sid] = self._pending.pop(int(sid))
+            mask = np.zeros(self.num_slots, bool)
+            mask[ids] = True
+            if key is None:
+                self._recv_key, key = jax.random.split(self._recv_key)
+            self._carry, (obs, rew, done, info) = self._jit_step(
+                self._carry, jnp.asarray(acts), jnp.asarray(mask), key)
+            # Row selection happens host-side on the (tiny) fetched outputs:
+            # a device gather would re-specialize per distinct len(ids) —
+            # a fresh XLA compile every time the ready-set size changes.
+            return (np.asarray(obs)[ids], np.asarray(rew)[ids],
+                    np.asarray(done)[ids],
+                    jax.tree.map(lambda v: np.asarray(v)[ids], info), ids)
+
+    # -- lock-step facade ----------------------------------------------------
+    # With every slot active this is EnvPool(backend="vmap") bit-for-bit
+    # (same venv.reset split, same carry-key chain, same per-step splits), so
+    # the conformance matrix and golden traces drive the async engine through
+    # the ordinary pool protocol.
+    def reset(self, seed: int = 0) -> jax.Array:
+        with self._cond:
+            self._pending.clear()
+            self._carry = self._jit_init(jax.random.PRNGKey(seed))
+            self._active[:] = True
+            self._key = jax.random.fold_in(jax.random.PRNGKey(seed), 0x57EB)
+            # copy: the carry (incl. this obs buffer) is donated to the next
+            # step — returning the alias would hand the caller a buffer that
+            # dies on their first send/recv
+            return jnp.copy(self._carry[1])
+
+    def step(self, actions) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+        if self._key is None:
+            raise RuntimeError("call reset() before step()")
+        if not self._active.all():
+            raise RuntimeError("lock-step facade needs every slot active; "
+                               "use send/recv with a partial session set")
+        self._key, step_key = tuple(jax.random.split(self._key))
+        self.send(actions, np.arange(self.num_slots))
+        obs, rew, done, info, _ = self.recv(key=step_key)
+        return obs, rew, done, info
+
+    def sample_actions(self, seed: int = 0) -> jax.Array:
+        return sample_batch(self.action_space, jax.random.PRNGKey(seed),
+                            self.num_slots)

@@ -25,8 +25,16 @@ class StragglerReport:
 
 
 class StragglerTracker:
-    def __init__(self, num_hosts: int, threshold: float = 1.5, alpha: float = 0.2,
-                 patience: int = 3):
+    """Participants are hosts for SPMD training; the env service
+    (serving/env_service.py) reuses the same policy over *client sessions* —
+    a session whose action round-trip is persistently slower than the fleet
+    median is the slow consumer the async pool exists to isolate, and gets
+    the same profile->demote advice. Sessions come and go, so ids register
+    lazily on first `record` (num_hosts=0) and `forget` drops departed ones.
+    """
+
+    def __init__(self, num_hosts: int = 0, threshold: float = 1.5,
+                 alpha: float = 0.2, patience: int = 3):
         self.threshold = threshold
         self.alpha = alpha
         self.patience = patience
@@ -34,7 +42,8 @@ class StragglerTracker:
         self.strikes: Dict[int, int] = {h: 0 for h in range(num_hosts)}
 
     def record(self, host_id: int, step_time_s: float) -> None:
-        prev = self.ewma[host_id]
+        prev = self.ewma.setdefault(host_id, 0.0)
+        self.strikes.setdefault(host_id, 0)
         self.ewma[host_id] = step_time_s if prev == 0.0 else (
             self.alpha * step_time_s + (1 - self.alpha) * prev
         )
@@ -61,6 +70,11 @@ class StragglerTracker:
             if advice != "ok":
                 out.append(StragglerReport(h, v, med, ratio, advice))
         return out
+
+    def forget(self, host_id: int) -> None:
+        """Drop a departed participant (a released session) from the fleet."""
+        self.ewma.pop(host_id, None)
+        self.strikes.pop(host_id, None)
 
     def hosts_to_demote(self) -> List[int]:
         return [r.host_id for r in self.reports() if r.advice == "demote"]

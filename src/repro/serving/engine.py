@@ -8,6 +8,12 @@ the same cache rows. This is the standard continuous-batching shape
   - `prefill_into_slot` writes one request's cache rows at its slot index;
   - `decode_step` advances every active slot by one token;
   - inactive slots are masked by `active` so they cost no host logic.
+
+Slot bookkeeping (ownership, FIFO admission, queue-wait/residency
+accounting) is the shared `serving/slots.SlotTable` — the same table the
+env service (serving/env_service.py) schedules env sessions with, so the
+refill-latency accounting that used to exist only there now covers this
+engine too (`ServeEngine.stats()`).
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.serving.slots import SlotTable
 
 
 @dataclasses.dataclass
@@ -46,8 +53,7 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.temperature = temperature
-        self._queue: List[Request] = []
-        self._running: Dict[int, Request] = {}
+        self._requests: Dict[int, Request] = {}
         caches = lm.init_cache(cfg, slots, max_seq)
         self.state = EngineState(
             caches=caches,
@@ -55,7 +61,7 @@ class ServeEngine:
             pos=jnp.zeros((slots,), jnp.int32),
             active=jnp.zeros((slots,), bool),
         )
-        self._slot_req: List[Optional[int]] = [None] * slots
+        self.slots_table = SlotTable(slots)
         self._decode = jax.jit(self._decode_impl)
 
     # -- device programs -------------------------------------------------
@@ -73,16 +79,15 @@ class ServeEngine:
     # -- host scheduler ----------------------------------------------------
     def submit(self, req: Request) -> None:
         req.output = []
-        self._queue.append(req)
+        self._requests[req.rid] = req
+        self.slots_table.submit(req.rid)
 
     def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self._slot_req) if r is None]
+        return self.slots_table.free_slots()
 
     def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self._queue:
-                break
-            req = self._queue.pop(0)
+        for slot, rid in self.slots_table.admit():
+            req = self._requests[rid]
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
             # prefill this request alone (batch 1) then splice its cache rows
             logits, cache1 = lm.prefill(self.cfg, self.params,
@@ -100,32 +105,33 @@ class ServeEngine:
                 active=self.state.active.at[slot].set(True),
             )
             req.output.append(int(tok[0]))
-            self._slot_req[slot] = req.rid
-            self._running[req.rid] = req
 
     def step(self) -> None:
         """One scheduler tick: admit, decode, retire."""
         self._admit()
-        if not any(self._slot_req):
-            pass
         self.state, next_tok = self._decode(self.params, self.state)
         toks = np.asarray(next_tok)
-        for slot, rid in enumerate(self._slot_req):
-            if rid is None:
-                continue
-            req = self._running[rid]
+        for rid in self.slots_table.running():
+            slot = self.slots_table.slot_of(rid)
+            req = self._requests[rid]
             req.output.append(int(toks[slot]))
             done = len(req.output) >= req.max_new_tokens or (
                 req.eos_id is not None and toks[slot] == req.eos_id
             ) or int(self.state.pos[slot]) >= self.max_seq - 1
             if done:
-                self._slot_req[slot] = None
-                del self._running[rid]
+                self.slots_table.release(rid)
+                del self._requests[rid]
                 self.state = self.state._replace(
                     active=self.state.active.at[slot].set(False))
 
     def run(self, max_ticks: int = 1000) -> None:
         ticks = 0
-        while (self._queue or self._running) and ticks < max_ticks:
+        while (self.slots_table.queued_count
+               or self.slots_table.active_count) and ticks < max_ticks:
             self.step()
             ticks += 1
+
+    def stats(self) -> Dict[str, float]:
+        """Queue-wait / residency / occupancy accounting (SlotTable) — the
+        refill-latency numbers that previously existed only for env serving."""
+        return self.slots_table.stats()

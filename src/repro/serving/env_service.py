@@ -1,0 +1,226 @@
+"""EnvService — session-multiplexing env serving over AsyncEnvPool.
+
+The serving analogue of ServeEngine (serving/engine.py), with env sessions
+in place of decode requests: many independent client sessions — each its
+own AutoReset episode stream with its own key chain and step budget — are
+multiplexed onto ONE fused batch. The host scheduler is the same
+continuous-batching loop:
+
+  submit -> FIFO admission queue (serving/slots.SlotTable, shared with
+  ServeEngine) -> a free slot's rows are *reset-spliced* with the session's
+  seed (the prefill-into-slot move) -> every tick steps the active lanes
+  through the pool's masked step -> budget-exhausted sessions retire and
+  free their slot for the next queued session.
+
+Telemetry: per-tick recv latency (p50/p99 via `stats()` — the fig_async
+numbers), per-session queue wait and residency (SlotTable), and a
+runtime/straggler.StragglerTracker over client action-latency so
+persistently slow consumers — the exact workload async mode exists to
+isolate — are flagged with the profile/demote advice instead of silently
+dragging the batch.
+
+The clock is injectable: the traffic-replay tests drive a scripted clock
+so latency accounting is deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.env import Env
+from repro.core.spaces import Box, Discrete, MultiDiscrete
+from repro.pool.async_pool import AsyncEnvPool
+from repro.runtime.straggler import StragglerTracker
+from repro.serving.slots import SlotTable, percentile
+
+
+def _np_sample(space, rng: np.random.Generator):
+    """Cheap host-side action sampling (the synthetic-client default policy).
+
+    Sessions number in the thousands; per-session jax dispatches for action
+    sampling would bench the host RNG, not the pool, so the default client
+    uses numpy. Deterministic tests pass explicit `policy=` scripts instead.
+    """
+    if isinstance(space, Discrete):
+        return np.asarray(rng.integers(space.n), np.dtype(space.dtype))
+    if isinstance(space, MultiDiscrete):
+        return rng.integers(np.zeros_like(np.asarray(space.nvec)),
+                            np.asarray(space.nvec)).astype(space.dtype)
+    if isinstance(space, Box):
+        lo = np.nan_to_num(np.asarray(space.low, np.float64), neginf=-1.0)
+        hi = np.nan_to_num(np.asarray(space.high, np.float64), posinf=1.0)
+        return rng.uniform(lo, hi, size=space.shape).astype(space.dtype)
+    raise TypeError(f"no default sampler for space {type(space).__name__}")
+
+
+@dataclasses.dataclass
+class Session:
+    """One client: seed, step budget, and an optional action policy.
+
+    `policy(obs, t) -> action` is called once per tick while running; None
+    means sample uniformly from the action space with a per-session numpy
+    generator. Results accumulate in place (the Request.output idiom of
+    serving/engine.py).
+    """
+
+    sid: int
+    seed: int
+    num_steps: int
+    policy: Optional[Callable] = None
+    # -- filled by the service --------------------------------------------
+    steps: int = 0
+    total_reward: float = 0.0
+    episodes: int = 0
+    first_obs: Optional[np.ndarray] = None
+    _rng: Optional[np.random.Generator] = None
+    _last_obs: Optional[np.ndarray] = None
+
+    def action(self, space):
+        if self.policy is not None:
+            return self.policy(self._last_obs, self.steps)
+        if self._rng is None:
+            self._rng = np.random.default_rng(self.seed)
+        return _np_sample(space, self._rng)
+
+
+class EnvService:
+    """Continuous-batching env server: many sessions, one fused batch.
+
+    >>> svc = EnvService("CartPole-v1", num_slots=64)
+    >>> for i in range(1000):
+    ...     svc.submit(Session(sid=i, seed=i, num_steps=100))
+    >>> svc.run()            # admit / step / retire until all served
+    >>> svc.stats()["recv_p99_s"]
+    """
+
+    def __init__(self, env: Union[Env, str], num_slots: int, *,
+                 backend: str = "auto", tracker: Optional[StragglerTracker] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.pool = AsyncEnvPool(env, num_slots, backend=backend)
+        self.num_slots = num_slots
+        self._clock = clock or time.monotonic
+        self.slots = SlotTable(num_slots, clock=self._clock)
+        self.tracker = tracker or StragglerTracker()
+        self._sessions: Dict[int, Session] = {}
+        self._draining = False
+        self.recv_latencies: List[float] = []
+        self.ticks = 0
+        self.steps_served = 0
+        # latest StragglerReport per flagged sid; sessions retire (and the
+        # tracker forgets them) before stats() is usually read, so the policy
+        # is evaluated every tick and flagged sessions logged here
+        self.straggler_log: Dict[int, object] = {}
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, session: Session) -> None:
+        if session.sid in self._sessions:
+            raise ValueError(f"session {session.sid} already submitted")
+        if session.num_steps < 1:
+            raise ValueError("num_steps budget must be >= 1")
+        if self._draining:
+            raise RuntimeError("service is draining; not accepting sessions")
+        self._sessions[session.sid] = session
+        self.slots.submit(session.sid)
+
+    @property
+    def queued(self) -> int:
+        return self.slots.queued_count
+
+    @property
+    def running(self) -> int:
+        return self.slots.active_count
+
+    # -- scheduler loop -------------------------------------------------------
+    def _admit(self) -> None:
+        for slot, sid in self.slots.admit():
+            sess = self._sessions[sid]
+            _, obs = self.pool.admit(seed=sess.seed, slot=slot)
+            sess.first_obs = np.asarray(obs)
+            sess._last_obs = sess.first_obs
+
+    def tick(self) -> bool:
+        """One scheduler tick: admit, collect actions, masked step, retire.
+
+        Returns False when there is nothing to do (drained/idle).
+        """
+        if not self._draining:
+            self._admit()
+        running = self.slots.running()
+        if not running:
+            return False
+        self.ticks += 1
+
+        acts, slot_ids = [], []
+        for sid in running:
+            sess = self._sessions[sid]
+            t0 = self._clock()
+            acts.append(np.asarray(sess.action(self.pool.action_space)))
+            # the client's action round-trip is the consumer latency the
+            # straggler policy watches (slow consumers stall lock-step pools;
+            # here they only slow their own lane)
+            self.tracker.record(sid, self._clock() - t0)
+            slot_ids.append(self.slots.slot_of(sid))
+        self.pool.send(np.stack(acts), np.asarray(slot_ids))
+
+        t0 = self._clock()
+        obs, rew, done, info, out_slots = self.pool.recv()
+        self.recv_latencies.append(self._clock() - t0)
+
+        obs_np, rew_np = np.asarray(obs), np.asarray(rew)
+        done_np = np.asarray(done)
+        for i, slot in enumerate(out_slots):
+            sid = self.slots.owner(int(slot))
+            sess = self._sessions[sid]
+            sess.steps += 1
+            self.steps_served += 1
+            sess.total_reward += float(rew_np[i])
+            sess.episodes += int(done_np[i])
+            sess._last_obs = obs_np[i]
+            if sess.steps >= sess.num_steps:
+                self._retire(int(sid))
+        for rep in self.tracker.reports():
+            self.straggler_log[rep.host_id] = rep
+        return True
+
+    def _retire(self, sid: int) -> None:
+        self.pool.release(self.slots.slot_of(sid))
+        self.slots.release(sid)
+        self.tracker.forget(sid)
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        """Serve until every submitted session's budget is spent."""
+        ticks = 0
+        while (self.slots.queued_count or self.slots.active_count) \
+                and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        """Graceful drain: stop admitting, finish the running sessions.
+
+        Queued-but-never-admitted sessions stay queued (a later `resume` is
+        just `self._draining = False`); running ones run to budget.
+        """
+        self._draining = True
+        ticks = 0
+        while self.slots.active_count and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks
+
+    # -- telemetry ------------------------------------------------------------
+    def stats(self) -> Dict:
+        out = dict(self.slots.stats())
+        out.update({
+            "ticks": self.ticks,
+            "steps_served": self.steps_served,
+            "recv_p50_s": percentile(self.recv_latencies, 50),
+            "recv_p99_s": percentile(self.recv_latencies, 99),
+            "stragglers": [dataclasses.asdict(r)
+                           for r in self.straggler_log.values()],
+        })
+        return out

@@ -24,9 +24,10 @@ API_SURFACE = {
         "rollout_random", "spec", "spec_of", "specs",
     ],
     "repro.pool": [
-        "EnvPool", "FUSED_BACKENDS", "HostPool", "PoolState", "PoolStep",
-        "STEP_BACKENDS", "ShardedEnvPool", "XlaPool", "default_pool_mesh",
-        "make_pool", "make_vec", "sample_batch",
+        "AsyncEnvPool", "AsyncUnsupportedError", "EnvPool", "FUSED_BACKENDS",
+        "HostPool", "PoolState", "PoolStep", "STEP_BACKENDS", "ShardedEnvPool",
+        "XlaPool", "default_pool_mesh", "make_pool", "make_vec",
+        "sample_batch",
     ],
     "repro.cairl": [
         "EnvPool", "HostPool", "ShardedEnvPool", "make", "make_functional",

@@ -1,0 +1,324 @@
+"""Async pool + env service: the traffic-replay determinism harness.
+
+The load-bearing claim of `repro.pool.AsyncEnvPool` is that slot recycling
+is *invisible* to every other session: admitting, stepping and retiring
+sessions in any interleaving must leave each session's trajectory
+bit-identical to the same seed run ALONE through a 1-env lock-step
+EnvPool. The tests here prove it by replaying scripted traffic — a
+deterministic clock plus a scripted session arrival/departure schedule —
+against that solo oracle, for one env family per suite tier (classic
+control, procedural grid, arcade).
+
+Also here: the lock-step facade's bit-equivalence to
+`EnvPool(backend="vmap")` (including the key-dependent Multitask env —
+the strongest RNG-plumbing check we have), masked-step lane invariance,
+send/recv protocol errors, the EnvService scheduler end-to-end (budgets,
+drain, straggler wiring) and device residency of the compiled masked step.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+from conftest import assert_leaves_match
+
+from repro.core import make
+from repro.core.spaces import sample_batch
+from repro.core.wrappers import TimeLimit
+from repro.launch.hlo_analysis import host_transfer_ops
+from repro.pool import AsyncEnvPool, AsyncUnsupportedError, EnvPool, make_vec
+from repro.serving.env_service import EnvService, Session
+
+#: one id per suite tier — classic control, procedural grid, arcade; the
+#: grid/arcade replays ride in the `slow` sweep (9 solo-oracle compiles each)
+REPLAY_IDS = [
+    pytest.param("CartPole-v1"),
+    pytest.param("FrozenLake-v0", marks=pytest.mark.slow),
+    pytest.param("Pong-raw", marks=pytest.mark.slow),
+]
+
+
+def _solo_oracle(name: str, seed: int, actions):
+    """The session's ground truth: same seed, alone, lock-step EnvPool."""
+    pool = EnvPool(make(name), 1, backend="vmap")
+    first_obs = np.asarray(pool.reset(seed=seed))[0]
+    rows = []
+    for a in actions:
+        obs, rew, done, _ = pool.step(np.asarray(a)[None])
+        rows.append((np.asarray(obs)[0], np.asarray(rew)[0],
+                     np.asarray(done)[0]))
+    return first_obs, rows
+
+
+def _session_actions(name: str, sid: int, budget: int):
+    env = make(name)
+    key = jax.random.PRNGKey(9000 + sid)
+    return [np.asarray(sample_batch(env.action_space,
+                                    jax.random.fold_in(key, t), 1))[0]
+            for t in range(budget)]
+
+
+# -- tentpole: traffic replay vs the solo oracle ------------------------------
+
+@pytest.mark.parametrize("name", REPLAY_IDS)
+def test_traffic_replay_bit_parity_vs_solo(name):
+    """Scripted arrival/departure traffic: 9 sessions through 3 slots, with
+    staggered arrivals, early departures and slot reuse. Every session's
+    (first_obs, obs, reward, done) stream must be bit-identical to its solo
+    lock-step run — slot recycling must not perturb anyone's key chain."""
+    num_slots = 3
+    budgets = [4, 2, 6, 3, 5, 1, 4, 2, 3]
+    sessions = {sid: {"seed": 50 + sid,
+                      "acts": _session_actions(name, sid, b),
+                      "rows": [], "first_obs": None, "t": 0}
+                for sid, b in enumerate(budgets)}
+
+    pool = AsyncEnvPool(name, num_slots, backend="auto")
+    queue = list(sessions)         # arrival order = sid order
+    slot_sid = {}                  # slot -> sid currently hosted
+    rng = np.random.default_rng(0)  # scheduling noise ONLY (which lanes send)
+
+    while queue or slot_sid:
+        # arrivals: fill free slots from the queue (scripted FIFO)
+        while queue and len(slot_sid) < num_slots:
+            sid = queue.pop(0)
+            slot, obs = pool.admit(seed=sessions[sid]["seed"])
+            slot_sid[slot] = sid
+            sessions[sid]["first_obs"] = np.asarray(obs)
+        # a deterministic-but-adversarial subset of lanes sends this tick
+        ready = sorted(slot_sid)
+        if len(ready) > 1 and rng.random() < 0.5:
+            ready = sorted(rng.choice(ready, size=len(ready) - 1,
+                                      replace=False).tolist())
+        acts = np.stack([sessions[slot_sid[s]]["acts"]
+                         [sessions[slot_sid[s]]["t"]] for s in ready])
+        pool.send(acts, np.asarray(ready))
+        obs, rew, done, _, ids = pool.recv()
+        for i, slot in enumerate(ids):
+            sess = sessions[slot_sid[int(slot)]]
+            sess["rows"].append((obs[i], rew[i], done[i]))
+            sess["t"] += 1
+        # departures: budget spent -> release the slot for refill
+        for slot in [s for s, sid in slot_sid.items()
+                     if sessions[sid]["t"] >= len(sessions[sid]["acts"])]:
+            pool.release(slot)
+            del slot_sid[slot]
+
+    for sid, sess in sessions.items():
+        ref_first, ref_rows = _solo_oracle(name, sess["seed"], sess["acts"])
+        assert_leaves_match(ref_first, sess["first_obs"],
+                            f"{name} sid{sid} first_obs")
+        assert len(sess["rows"]) == len(ref_rows)
+        for t, (got, ref) in enumerate(zip(sess["rows"], ref_rows)):
+            assert_leaves_match(ref, got, f"{name} sid{sid} step{t}")
+
+
+# -- lock-step facade == EnvPool(backend="vmap"), bit for bit -----------------
+
+@pytest.mark.parametrize("name", ["CartPole-v1", "Multitask-v0"])
+def test_facade_bit_equivalent_to_vmap_envpool(name):
+    """With every slot active the async pool IS the lock-step pool: same
+    reset split, same carry-key chain, same per-step splits. Multitask's
+    dynamics consume the per-step keys, so this would fail on any RNG
+    plumbing difference — not just on state divergence."""
+    n, steps = 4, 8
+    apool = make_vec(name, n, backend="async")
+    vpool = make_vec(name, n, backend="vmap")
+    assert_leaves_match(vpool.reset(seed=123), apool.reset(seed=123),
+                        f"{name} reset")
+    for t in range(steps):
+        a = np.asarray(vpool.sample_actions(seed=t))
+        ref = vpool.step(a)
+        got = apool.step(a)
+        assert_leaves_match(ref[:3], got[:3], f"{name} step{t}")
+        assert_leaves_match(dict(ref[3]), dict(got[3]), f"{name} info{t}")
+
+
+def test_fused_backend_matches_vmap_backend():
+    """The masked fused step (kernels/envstep active=) and the masked vmap
+    step agree lane for lane under partial activity."""
+    n = 4
+    fused = AsyncEnvPool("CartPole-v1", n, backend="jnp")
+    ref = AsyncEnvPool("CartPole-v1", n, backend="vmap")
+    for pool in (fused, ref):
+        for sid in range(3):          # slot 3 stays empty
+            pool.admit(seed=sid)
+    for t in range(6):
+        ready = [0, 2] if t % 2 else [0, 1, 2]
+        acts = np.zeros(len(ready), np.int32)
+        for pool in (fused, ref):
+            pool.send(acts, np.asarray(ready))
+        out_f, out_r = fused.recv(), ref.recv()
+        assert list(out_f[4]) == list(out_r[4]) == ready
+        assert_leaves_match(out_r[:3], out_f[:3], f"tick{t}")
+
+
+def test_inactive_lanes_keep_state_and_report_zero():
+    pool = AsyncEnvPool("CartPole-v1", 4, backend="auto")
+    for sid in range(4):
+        pool.admit(seed=sid)
+    before = jax.tree.map(np.asarray, pool._carry[0])
+    pool.send(np.ones(2, np.int32), np.asarray([1, 3]))
+    obs, rew, done, _, ids = pool.recv()
+    assert list(ids) == [1, 3]
+    after = jax.tree.map(np.asarray, pool._carry[0])
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a[0], b[0])  # lane 0 untouched, bit-for-bit
+        np.testing.assert_array_equal(a[2], b[2])  # lane 2 untouched
+
+
+def test_slot_recycle_does_not_perturb_neighbours():
+    """Run lane 0 with and without a churning neighbour in lane 1; lane 0's
+    trajectory must be identical."""
+    acts = _session_actions("CartPole-v1", 0, 6)
+
+    def lane0_rows(churn: bool):
+        pool = AsyncEnvPool("CartPole-v1", 2, backend="auto")
+        pool.admit(seed=7, slot=0)
+        if churn:
+            pool.admit(seed=1, slot=1)
+        rows = []
+        for t, a in enumerate(acts):
+            if churn and t in (2, 4):   # retire + replace the neighbour
+                pool.release(1)
+                pool.admit(seed=100 + t, slot=1)
+            ids = [0, 1] if churn else [0]
+            batch = np.stack([a] * len(ids))
+            pool.send(batch, np.asarray(ids))
+            obs, rew, done, _, out = pool.recv()
+            rows.append((obs[0], rew[0], done[0]))
+        return rows
+
+    for quiet, churned in zip(lane0_rows(False), lane0_rows(True)):
+        assert_leaves_match(quiet, churned, "lane0")
+
+
+# -- protocol errors ----------------------------------------------------------
+
+def test_send_recv_protocol_errors():
+    pool = AsyncEnvPool("CartPole-v1", 2, backend="auto")
+    with pytest.raises(RuntimeError, match="no actions in flight"):
+        pool.recv()
+    sid, _ = pool.admit(seed=0)
+    with pytest.raises(ValueError, match="no running session"):
+        pool.send(np.zeros(1, np.int32), [1 - sid])
+    pool.send(np.zeros(1, np.int32), [sid])
+    with pytest.raises(ValueError, match="already in flight"):
+        pool.send(np.zeros(1, np.int32), [sid])
+    pool.recv()
+    with pytest.raises(ValueError, match="exactly one of"):
+        pool.admit(seed=1, key=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="already hosts"):
+        pool.admit(seed=1, slot=sid)
+    pool.admit(seed=1)
+    with pytest.raises(RuntimeError, match="no free slot"):
+        pool.admit(seed=2)
+    pool.release(sid)
+    with pytest.raises(ValueError, match="no running session"):
+        pool.release(sid)
+    with pytest.raises(ValueError, match="batch"):
+        pool.send(np.zeros(2, np.int32), [1 - sid])
+
+
+def test_unsupported_backend_raises_named_error():
+    with pytest.raises(AsyncUnsupportedError, match="fused megastep"):
+        AsyncEnvPool("Multitask-v0", 2, backend="jnp")
+    # "auto" degrades to the masked vmap step instead
+    assert AsyncEnvPool("Multitask-v0", 2).backend == "vmap"
+
+
+def test_recv_blocks_for_min_ready_across_threads():
+    pool = AsyncEnvPool("CartPole-v1", 2, backend="auto")
+    for sid in range(2):
+        pool.admit(seed=sid)
+    pool.send(np.zeros(1, np.int32), [0])
+
+    def late_client():
+        pool.send(np.ones(1, np.int32), [1])
+
+    t = threading.Timer(0.05, late_client)
+    t.start()
+    try:
+        obs, rew, done, _, ids = pool.recv(max_wait=5.0, min_ready=2)
+    finally:
+        t.join()
+    assert list(ids) == [0, 1]
+
+
+# -- EnvService scheduler end-to-end ------------------------------------------
+
+def test_env_service_serves_all_budgets():
+    svc = EnvService("CartPole-v1", num_slots=4, backend="auto")
+    budgets = [8 + (i % 5) for i in range(11)]
+    for i, b in enumerate(budgets):
+        svc.submit(Session(sid=i, seed=100 + i, num_steps=b))
+    svc.run()
+    st = svc.stats()
+    assert st["released"] == 11 and st["running"] == 0 and st["queued"] == 0
+    assert svc.steps_served == sum(budgets)
+    for i, b in enumerate(budgets):
+        sess = svc._sessions[i]
+        assert sess.steps == b
+        assert sess.first_obs is not None and sess.first_obs.shape == (4,)
+    assert st["recv_p99_s"] >= st["recv_p50_s"] > 0
+
+
+def test_env_service_drain_finishes_running_only():
+    svc = EnvService("CartPole-v1", num_slots=4, backend="auto")
+    for i in range(8):
+        svc.submit(Session(sid=i, seed=i, num_steps=5))
+    svc.tick()                      # admits 4, steps once
+    svc.drain()
+    st = svc.stats()
+    assert st["running"] == 0 and st["queued"] == 4 and st["released"] == 4
+    with pytest.raises(RuntimeError, match="draining"):
+        svc.submit(Session(sid=99, seed=0, num_steps=3))
+
+
+def test_env_service_flags_slow_consumer():
+    """Straggler wiring: a client whose action round-trip dominates the
+    fleet median gets profile→demote advice, on the scripted clock."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    def slow_policy(obs, step):
+        t[0] += 0.5
+        return np.int32(0)
+
+    svc = EnvService("CartPole-v1", num_slots=4, backend="auto", clock=clock)
+    for i in range(4):
+        pol = slow_policy if i == 3 else (lambda obs, step: np.int32(0))
+        svc.submit(Session(sid=i, seed=i, num_steps=6, policy=pol))
+    svc.run()
+    flagged = svc.stats()["stragglers"]
+    assert [r["host_id"] for r in flagged] == [3]
+    assert flagged[0]["advice"] in ("profile", "demote")
+
+
+def test_env_service_session_equals_solo_run():
+    """End to end through the scheduler: a scripted-policy session's reward
+    stream equals its solo lock-step run (the service-level replay claim)."""
+    acts = _session_actions("CartPole-v1", 3, 7)
+    _, ref_rows = _solo_oracle("CartPole-v1", 42, acts)
+
+    svc = EnvService("CartPole-v1", num_slots=2, backend="auto")
+    svc.submit(Session(sid=0, seed=42, num_steps=7,
+                       policy=lambda obs, step: acts[step]))
+    svc.submit(Session(sid=1, seed=5, num_steps=11))
+    svc.submit(Session(sid=2, seed=6, num_steps=3))
+    svc.run()
+    total_ref = float(np.sum([r[1] for r in ref_rows], dtype=np.float64))
+    assert svc._sessions[0].total_reward == pytest.approx(total_ref)
+    assert svc._sessions[0].steps == 7
+
+
+# -- device residency ---------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "vmap"])
+def test_masked_step_core_is_device_resident(backend):
+    pool = AsyncEnvPool("CartPole-v1", 8, backend=backend)
+    ops = host_transfer_ops(pool.step_lowered().compile().as_text())
+    assert ops == [], f"host transfers in async {backend} core: {ops}"

@@ -179,6 +179,53 @@ def test_pool_conformance(name):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_async_backend_conformance(name):
+    """`make_vec(id, N, backend="async")` hosts every id behind the shared
+    pool protocol. The lock-step facade must be bit-identical to the vmap
+    EnvPool (same reset split, same carry-key chain), which transitively
+    inherits the whole lock-step contract — spaces, `info["truncated"]`
+    iff a TimeLimit is declared, autoreset-after-done — for the async
+    engine; the space/info checks are still asserted directly below so a
+    facade bug cannot mask a contract bug."""
+    n, steps = 3, 6
+    apool = make_vec(name, n, backend="async")
+    vpool = make_vec(name, n, backend="vmap")
+    obs = apool.reset(seed=17)
+    assert_leaves_match(vpool.reset(seed=17), obs, f"{name} reset")
+    for i in range(n):
+        _assert_in_space(apool.observation_space, np.asarray(obs)[i],
+                         f"{name} lane{i} reset obs")
+    for t in range(steps):
+        a = np.asarray(vpool.sample_actions(seed=t))
+        ref, got = vpool.step(a), apool.step(a)
+        assert_leaves_match(ref[:3], got[:3], f"{name} step{t}")
+        assert ("truncated" in got[3]) == _has_time_limit(name), name
+        for i in range(n):
+            _assert_in_space(apool.observation_space, np.asarray(got[0])[i],
+                             f"{name} lane{i} step{t}")
+
+
+@pytest.mark.slow
+def test_async_autoreset_after_done():
+    """Async lanes keep flowing across episode boundaries: an Env instance
+    under a tight outer TimeLimit(4) forces `done` inside the session and
+    the AutoReset lane must restart in-place (obs back in the space, done
+    pulses observed on every lane)."""
+    env = TimeLimit(make("CartPole-v1"), 4)
+    pool = make_vec(env, 3, backend="async")
+    pool.reset(seed=5)
+    dones = np.zeros(3, np.int64)
+    for t in range(9):
+        obs, _, done, _ = pool.step(np.zeros(3, np.int32))
+        dones += np.asarray(done)
+        for i in range(3):
+            _assert_in_space(pool.observation_space, np.asarray(obs)[i],
+                             f"lane{i} step{t}")
+    assert (dones >= 2).all()  # steps 4 and 8 cut + reset on every lane
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("name", BASELINE_IDS)
 def test_python_baseline_parity(name):
     """Interpreted twin == compiled env, step for step, from a shared state.

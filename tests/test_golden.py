@@ -102,3 +102,71 @@ def test_every_registered_id_has_a_committed_trace():
     conformance sweep)."""
     missing = [n for n in registered() if not _path(n).exists()]
     assert not missing, f"golden traces missing for {missing}"
+
+
+# -- async engine vs the SAME committed traces --------------------------------
+
+def async_trace(name: str) -> dict:
+    """The `trace()` rollout, replayed through the async pool's send/recv.
+
+    `reset(seed)` reproduces `Vec.reset(PRNGKey(seed))` and
+    `recv(key=fold_in(key, t))` splits per-step keys exactly like
+    `Vec.step`, so the async engine is answerable to the *same* committed
+    goldens as the lock-step reference — no parallel trace set to drift.
+    """
+    from repro.pool import make_vec
+
+    env = make(name)
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    pool = make_vec(name, BATCH, backend="async")
+    obs0 = pool.reset(seed=sum(map(ord, name)))
+    rows = []
+    for t in range(STEPS):
+        a = sample_batch(env.action_space, jax.random.fold_in(key, 1000 + t),
+                         BATCH)
+        pool.send(np.asarray(a), np.arange(BATCH))
+        obs, rew, done, _, _ = pool.recv(key=jax.random.fold_in(key, t))
+        rows.append([float(np.asarray(obs, np.float64).sum()),
+                     float(np.asarray(rew, np.float64).sum()),
+                     int(np.asarray(done).sum())])
+    return {"reset_obs_sum": float(np.asarray(obs0, np.float64).sum()),
+            "rows": rows}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", _params())
+def test_async_golden_trace(name, regen_golden):
+    """The async engine answers to the committed goldens (never regenerates
+    them — the lock-step `trace()` path owns the files)."""
+    if regen_golden:
+        pytest.skip("goldens are regenerated by the lock-step path only")
+    path = _path(name)
+    assert path.exists(), f"no golden trace for {name!r}"
+    want = json.loads(path.read_text())
+    got = async_trace(name)
+    np.testing.assert_allclose(got["reset_obs_sum"], want["reset_obs_sum"],
+                               rtol=1e-4, atol=1e-4,
+                               err_msg=f"{name} async reset")
+    np.testing.assert_allclose(
+        np.asarray(got["rows"], np.float64),
+        np.asarray(want["rows"], np.float64), rtol=1e-4, atol=1e-4,
+        err_msg=f"{name}: async send/recv trajectory drifted from the "
+                "committed golden trace (tests/golden/)")
+
+
+def test_async_registry_completeness():
+    """Every registered id either hosts on the async pool or refuses with
+    the *named* error — no silent fallback can shrink async coverage."""
+    from repro.pool import AsyncEnvPool, AsyncUnsupportedError
+
+    hosted, refused = [], []
+    for name in registered():
+        try:
+            AsyncEnvPool(name, 1)
+            hosted.append(name)
+        except AsyncUnsupportedError:
+            refused.append(name)
+    assert hosted, "async pool hosts nothing"
+    assert not refused, (
+        f"ids refusing async hosting: {refused} — every current family is "
+        "a functional Env; a refusal here means a registration regressed")

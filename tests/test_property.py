@@ -177,3 +177,62 @@ def test_window_subset_of_causal(l, w, seed):
     # first w positions see identical context under both masks
     np.testing.assert_allclose(np.asarray(causal[:, :, :w]), np.asarray(windowed[:, :, :w]),
                                rtol=1e-4, atol=1e-4)
+
+
+# -- slot scheduler: no double-assign, no starvation, mask == running ---------------
+_ASYNC_POOL = []  # built once; jit caches are per-instance, so reuse across examples
+
+
+def _shared_async_pool():
+    from repro.pool import AsyncEnvPool
+
+    if not _ASYNC_POOL:
+        _ASYNC_POOL.append(AsyncEnvPool("CartPole-v1", 4, backend="auto"))
+    pool = _ASYNC_POOL[0]
+    for slot in range(pool.num_slots):       # scrub state between examples
+        if pool._active[slot]:
+            pool.release(slot)
+    return pool
+
+
+@given(st.lists(st.sampled_from(["submit", "admit", "step", "finish"]),
+                min_size=1, max_size=40),
+       st.integers(0, 2**16))
+def test_slot_scheduler_interleavings(ops, seed):
+    """Random submit/step/finish interleavings through the REAL async pool +
+    SlotTable: a slot never hosts two sessions, a queued session is never
+    starved while a slot sits free, and the pool's device-side `active`
+    mask always equals the table's running count."""
+    from repro.serving.slots import SlotTable
+
+    rng = np.random.default_rng(seed)
+    pool = _shared_async_pool()
+    table = SlotTable(pool.num_slots)
+    next_sid = [0]
+
+    for op in ops:
+        running = table.running()
+        if op == "submit":
+            table.submit(next_sid[0])
+            next_sid[0] += 1
+        elif op == "admit":
+            for slot, sid in table.admit():
+                got_slot, _ = pool.admit(seed=sid, slot=slot)
+                assert got_slot == slot
+        elif op == "step" and running:
+            k = int(rng.integers(1, len(running) + 1))
+            sids = sorted(rng.choice(running, size=k, replace=False).tolist())
+            ids = [table.slot_of(s) for s in sids]
+            pool.send(np.zeros(len(ids), np.int32), np.asarray(ids))
+            *_, out_ids = pool.recv()
+            assert sorted(out_ids.tolist()) == sorted(ids)
+        elif op == "finish" and running:
+            sid = running[int(rng.integers(len(running)))]
+            pool.release(table.release(sid))
+        # invariants, after every op --------------------------------------
+        slots_held = [table.slot_of(s) for s in table.running()]
+        assert len(slots_held) == len(set(slots_held)), "slot double-assigned"
+        assert not (table.queued_count and table.free_slots()
+                    and op == "admit"), "queued session starved of a free slot"
+        assert int(pool.active.sum()) == table.active_count == len(slots_held)
+        assert sorted(pool.free_slots()) == sorted(table.free_slots())

@@ -1,0 +1,120 @@
+"""Unit tests for serving/slots.SlotTable — the shared slot bookkeeping.
+
+ServeEngine's `_free_slots`/admit ordering used to be inline and untested
+(the refill-latency blind spot this PR closes); these tests pin the
+extracted table's contract for BOTH consumers: FIFO admission into the
+lowest free slots, one-owner-per-slot, and scripted-clock queue-wait /
+residency accounting.
+"""
+import math
+
+import pytest
+
+from repro.serving.slots import SlotTable, percentile
+
+
+class ScriptedClock:
+    """Deterministic clock: every read advances by `tick` (default 1.0)."""
+
+    def __init__(self, tick: float = 1.0):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+
+def test_fifo_admit_fills_lowest_slots_first():
+    tab = SlotTable(3)
+    for rid in ("a", "b", "c", "d", "e"):
+        tab.submit(rid)
+    assert tab.admit() == [(0, "a"), (1, "b"), (2, "c")]
+    assert tab.queued_count == 2 and tab.active_count == 3
+    assert tab.running() == ["a", "b", "c"]
+    # free the MIDDLE slot: the earliest queued id must take exactly it
+    assert tab.release("b") == 1
+    assert tab.admit() == [(1, "d")]
+    assert tab.running() == ["a", "d", "c"]  # slot order, not admit order
+    assert tab.slot_of("d") == 1 and tab.owner(1) == "d"
+
+
+def test_admit_never_leaves_slot_free_with_queue_nonempty():
+    tab = SlotTable(4)
+    for rid in range(2):
+        tab.submit(rid)
+    tab.admit()
+    assert tab.queued_count == 0
+    assert len(tab.free_slots()) == 2  # queue drained, slots legitimately free
+    for rid in range(2, 9):
+        tab.submit(rid)
+    tab.admit()
+    assert tab.free_slots() == [] and tab.queued_count == 5
+
+
+def test_double_submit_rejected():
+    tab = SlotTable(2)
+    tab.submit("x")
+    with pytest.raises(ValueError, match="already queued"):
+        tab.submit("x")
+    tab.admit()
+    with pytest.raises(ValueError, match="already queued or running"):
+        tab.submit("x")  # running ids can't re-queue either
+    tab.release("x")
+    tab.submit("x")  # released ids may come back
+
+
+def test_release_unknown_id_raises():
+    tab = SlotTable(1)
+    with pytest.raises(KeyError):
+        tab.release("ghost")
+
+
+def test_scripted_clock_wait_and_residency_accounting():
+    clock = ScriptedClock()
+    tab = SlotTable(1, clock=clock)
+    tab.submit("a")      # t=1
+    tab.submit("b")      # t=2
+    tab.admit()          # t=3: a admitted, waited 2
+    assert tab.queue_waits == [2.0]
+    tab.release("a")     # t=4: a resided 1
+    assert tab.residencies == [1.0]
+    tab.admit()          # t=5: b admitted, waited 3
+    tab.release("b")     # t=6: b resided 1
+    st = tab.stats()
+    assert st["admitted"] == 2 and st["released"] == 2
+    assert st["queue_wait_p50"] == pytest.approx(2.0)
+    assert st["queue_wait_p99"] == pytest.approx(3.0)
+    assert st["residency_p50"] == st["residency_p99"] == pytest.approx(1.0)
+
+
+def test_stats_empty_table_is_nan_not_crash():
+    st = SlotTable(2).stats()
+    assert math.isnan(st["queue_wait_p50"]) and math.isnan(st["residency_p99"])
+    assert st["admitted"] == st["released"] == 0
+
+
+def test_percentile_nearest_rank():
+    xs = [5.0, 1.0, 3.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 50) == 3.0
+    assert percentile(xs, 100) == 5.0
+    assert math.isnan(percentile([], 50))
+
+
+def test_serve_engine_delegates_to_slot_table():
+    """ServeEngine's slot bookkeeping IS the shared table (no parallel
+    copy that could drift): `_free_slots` reflects SlotTable state and
+    `stats()` surfaces the table's accounting."""
+    from repro.serving.engine import ServeEngine
+
+    eng = ServeEngine.__new__(ServeEngine)  # bookkeeping only, no model
+    eng._requests = {}
+    eng.slots_table = SlotTable(3)
+    assert eng._free_slots() == [0, 1, 2]
+    eng.slots_table.submit(7)
+    eng.slots_table.admit()
+    assert eng._free_slots() == [1, 2]
+    assert eng.stats()["running"] == 1
+    eng.slots_table.release(7)
+    assert eng._free_slots() == [0, 1, 2]
