@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-async test-conformance api-check bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-async test-conformance test-fault api-check bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +29,14 @@ test-async:
 	$(PY) -m pytest -x -q tests/test_conformance.py tests/test_golden.py \
 		-k "async"
 
+# Fault-tolerance harness: checkpoint atomicity under injected mid-save
+# kills, heartbeat/straggler detection, supervised kill-and-resume golden
+# sweeps, EnvService eviction/drain/restore, and (slow, subprocess) the
+# multi-device device-loss re-mesh proof.
+test-fault:
+	$(PY) -m pytest -x -q tests/test_checkpoint.py tests/test_failures.py \
+		tests/test_supervisor.py
+
 # Registry-driven conformance: every registered env id × every backend
 # (python baseline / vmap / fused / pool) + the committed golden traces.
 # After an intentional dynamics change, regenerate the goldens with
@@ -42,13 +50,15 @@ test-conformance:
 bench-smoke: bench-json
 
 # Machine-readable perf record: fig1 (steps/s per backend, vmap vs fused
-# pallas megastep), fig4 (batch/device scaling) and fig_async (continuous
-# slot refill vs lock-step wave serving) in smoke mode.
+# pallas megastep), fig4 (batch/device scaling), fig_async (continuous
+# slot refill vs lock-step wave serving) and fig_fault (checkpointing tax,
+# snapshot amortization, device-loss recovery time) in smoke mode.
 bench-json:
 	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
 	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024 \
 		--json BENCH_fig4.json
 	$(PY) benchmarks/fig_async.py --smoke --json BENCH_fig_async.json
+	$(PY) benchmarks/fig_fault.py --smoke --json BENCH_fig_fault.json
 
 # Full paper-figure reproduction (CSV to stdout; slow).
 bench:

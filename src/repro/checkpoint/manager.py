@@ -3,6 +3,9 @@
 Format: one directory per step containing
   - `tree.json`   : flattened key-paths, shapes, dtypes (the pytree schema)
   - `arrays.npz`  : one entry per leaf, keyed by its path string
+  - `meta.json`   : optional host-side metadata (scheduler tables, session
+                    bookkeeping — anything JSON, written atomically with the
+                    arrays; serving/env_service.py's restart path uses it)
 
 Arrays are stored UNSHARDED (gathered), so a checkpoint written from a
 (16, 16) mesh restores onto (2, 16, 16), (8, 8) or a single CPU device —
@@ -12,7 +15,23 @@ manifest; the single-host gather form keeps semantics identical.
 
 Writes are atomic (tmp dir + os.replace) so a preemption mid-save never
 corrupts the latest checkpoint; `save(..., blocking=False)` runs the write
-in a daemon thread off the training loop's critical path.
+off the rollout loop's critical path. The gather (device -> host, with a
+copy so donated buffers cannot be reused under the snapshot) always happens
+on the caller thread — only the file I/O is deferred.
+
+Concurrency contract (tests/test_checkpoint.py):
+  - writes are SERIALIZED: a save (blocking or not) never starts until the
+    previous write — and its keep-k GC — has finished, so GC can never
+    collect around an in-flight tmp dir;
+  - the writer thread is non-daemon, so an interpreter exit joins it instead
+    of silently dropping the newest checkpoint mid-write;
+  - `wait()` joins the in-flight write and re-raises its error, `close()` is
+    wait + refuse further saves (also usable as a context manager).
+
+Fault injection: `_pre_replace_hook`, when set, runs after the tmp dir is
+fully written and immediately before the atomic rename — the exact window a
+preemption mid-save lands in. The fault harness (runtime/failures.py
+FaultInjector "preempt_save") raises from it to prove atomicity.
 """
 from __future__ import annotations
 
@@ -20,7 +39,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
@@ -33,7 +52,10 @@ def _flatten(tree: Pytree):
     out = {}
     for path, leaf in leaves:
         key = jax.tree_util.keystr(path)
-        out[key] = np.asarray(jax.device_get(leaf))
+        # copy: on CPU backends device_get can alias the device buffer, and
+        # donated carries reuse those buffers on the next step — an aliased
+        # snapshot would silently mutate under the writer thread
+        out[key] = np.array(jax.device_get(leaf), copy=True)
     return out
 
 
@@ -42,10 +64,20 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        self._write_lock = threading.Lock()  # serializes write + keep-k GC
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        #: test seam — called with the tmp path between the fully-written tmp
+        #: dir and the atomic os.replace (the mid-save preemption window)
+        self._pre_replace_hook: Optional[Callable[[str], None]] = None
 
     # -- write ---------------------------------------------------------------
-    def save(self, step: int, tree: Pytree, blocking: bool = True) -> str:
+    def save(self, step: int, tree: Pytree, blocking: bool = True,
+             meta: Optional[Dict] = None) -> str:
+        if self._closed:
+            raise RuntimeError(f"CheckpointManager({self.directory}) is closed")
+        self.wait()  # serialize: one write in flight, errors surface here
         flat = _flatten(tree)  # gather on the caller thread (device -> host)
         treedef = jax.tree_util.tree_structure(tree)
         schema = {
@@ -55,29 +87,60 @@ class CheckpointManager:
         }
 
         def write():
-            final = os.path.join(self.directory, f"step_{step:010d}")
-            tmp = final + ".tmp"
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-            with open(os.path.join(tmp, "tree.json"), "w") as f:
-                json.dump(schema, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+            with self._write_lock:
+                final = os.path.join(self.directory, f"step_{step:010d}")
+                tmp = final + ".tmp"
+                shutil.rmtree(tmp, ignore_errors=True)  # stale preempted write
+                os.makedirs(tmp)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                with open(os.path.join(tmp, "tree.json"), "w") as f:
+                    json.dump(schema, f)
+                if meta is not None:
+                    with open(os.path.join(tmp, "meta.json"), "w") as f:
+                        json.dump(meta, f)
+                if self._pre_replace_hook is not None:
+                    self._pre_replace_hook(tmp)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
 
         if blocking:
             write()
         else:
-            self.wait()
-            self._thread = threading.Thread(target=write, daemon=True)
+            # non-daemon: interpreter exit joins the write instead of
+            # dropping it mid-file
+            self._thread = threading.Thread(
+                target=self._run_write, args=(write,),
+                name=f"ckpt-save-{step}", daemon=False)
             self._thread.start()
         return os.path.join(self.directory, f"step_{step:010d}")
 
+    def _run_write(self, write) -> None:
+        try:
+            write()
+        except BaseException as e:  # surfaced on the next wait()/save()
+            self._error = e
+
     def wait(self) -> None:
+        """Join the in-flight write; re-raise its error, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def close(self) -> None:
+        """Join pending writes and refuse further saves."""
+        self._closed = True
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _gc(self) -> None:
         steps = self.all_steps()
@@ -96,13 +159,24 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template: Pytree, step: Optional[int] = None,
-                shardings: Optional[Pytree] = None) -> Pytree:
-        """Restore into `template`'s structure; `shardings` may target ANY mesh."""
+    def _step_path(self, step: Optional[int]) -> str:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        path = os.path.join(self.directory, f"step_{step:010d}")
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def read_meta(self, step: Optional[int] = None) -> Optional[Dict]:
+        """The `meta=` dict written with the checkpoint (None if absent)."""
+        path = os.path.join(self._step_path(step), "meta.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def restore(self, template: Pytree, step: Optional[int] = None,
+                shardings: Optional[Pytree] = None) -> Pytree:
+        """Restore into `template`'s structure; `shardings` may target ANY mesh."""
+        path = self._step_path(step)
         data = np.load(os.path.join(path, "arrays.npz"))
         paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
         shard_leaves = (

@@ -119,6 +119,8 @@ class AsyncEnvPool:
         self._jit_init = jax.jit(self._init_impl)
         self._jit_admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._jit_step = jax.jit(self._step_impl, donate_argnums=(0,))
+        self._jit_restore_lane = jax.jit(self._restore_lane_impl,
+                                         donate_argnums=(0,))
 
     # -- spaces / metadata ---------------------------------------------------
     @property
@@ -196,6 +198,16 @@ class AsyncEnvPool:
         return (new_state, new_obs), (lane(ts.obs, jnp.zeros_like(ts.obs)),
                                       reward, done, info)
 
+    def _restore_lane_impl(self, carry, lane, slot):
+        """Splice a SAVED lane (state rows + obs) into `slot` — the resume
+        half of client eviction: the episode continues exactly where the
+        evicted client left it, AutoReset key chain included."""
+        state, obs = carry
+        state = jax.tree.map(lambda full, one: full.at[slot].set(one),
+                             state, lane["state"])
+        obs = obs.at[slot].set(lane["obs"])
+        return (state, obs), lane["obs"]
+
     def step_lowered(self):
         """Lower (don't run) the masked-step core — for HLO inspection:
         fig_async certifies it contains zero host-transfer instructions."""
@@ -247,6 +259,83 @@ class AsyncEnvPool:
                 raise ValueError(f"slot {sid} has no running session")
             self._active[sid] = False
             self._pending.pop(sid, None)
+
+    def lane_state(self, sid: int) -> Dict[str, Any]:
+        """Host-materialized copy of one running lane's rows (state + obs).
+
+        The eviction half of graceful degradation (serving/env_service.py):
+        a dead client's episode is checkpointed off its slot so the slot can
+        refill, and `admit_lane()` later resumes the episode bit-exactly."""
+        with self._cond:
+            if not self._active[sid]:
+                raise ValueError(f"slot {sid} has no running session")
+            state, obs = self._carry
+            lane = {"state": jax.tree.map(lambda x: x[sid], state),
+                    "obs": obs[sid]}
+            return jax.tree.map(
+                lambda x: np.array(jax.device_get(x), copy=True), lane)
+
+    def admit_lane(self, lane: Dict[str, Any],
+                   slot: Optional[int] = None) -> Tuple[int, jax.Array]:
+        """Resume a `lane_state()` snapshot in a free slot: `(slot, obs)`."""
+        with self._cond:
+            self._ensure_carry()
+            if slot is None:
+                free = self.free_slots()
+                if not free:
+                    raise RuntimeError("no free slot; release() a session "
+                                       "first (or queue in EnvService)")
+                slot = free[0]
+            elif self._active[slot]:
+                raise ValueError(f"slot {slot} already hosts a session")
+            lane = jax.tree.map(jnp.asarray, lane)
+            self._carry, obs = self._jit_restore_lane(
+                self._carry, lane, jnp.asarray(slot, jnp.int32))
+            self._active[slot] = True
+            return slot, obs
+
+    # -- snapshot / restore ----------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Host snapshot of the whole slot table's carry: per-lane env state
+        (AutoReset key chains included), obs, the active mask and both
+        host-side key chains. Lanes with actions in flight must `recv()`
+        first — a snapshot is a step boundary, not a mid-step fence."""
+        with self._cond:
+            self._ensure_carry()
+            if self._pending:
+                raise RuntimeError(
+                    "snapshot with actions in flight; recv() first so the "
+                    "snapshot lands on a step boundary")
+            state, obs = self._carry
+            has_key = self._key is not None
+            tree = {
+                "state": state,
+                "obs": obs,
+                "active": self._active.copy(),
+                "recv_key": self._recv_key,
+                "facade_key": (self._key if has_key
+                               else jax.random.PRNGKey(0)),
+                "has_facade_key": np.asarray(has_key),
+            }
+            return jax.tree.map(
+                lambda x: np.array(jax.device_get(x), copy=True), tree)
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        """Restore a `state_dict()` snapshot (possibly into a fresh pool —
+        the service-restart path of serving/env_service.py)."""
+        with self._cond:
+            active = np.asarray(d["active"], bool)
+            if active.shape != (self.num_slots,):
+                raise ValueError(
+                    f"snapshot has {active.shape[0]} slots; this pool has "
+                    f"{self.num_slots}")
+            self._pending.clear()
+            self._carry = (jax.tree.map(jnp.asarray, d["state"]),
+                           jnp.asarray(d["obs"]))
+            self._active = active.copy()
+            self._recv_key = jnp.asarray(d["recv_key"])
+            self._key = (jnp.asarray(d["facade_key"])
+                         if bool(np.asarray(d["has_facade_key"])) else None)
 
     # -- async API -----------------------------------------------------------
     def send(self, actions, ids) -> None:

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.env import Env, Timestep, supports_fused_step
 from repro.core.registry import make as registry_make
@@ -116,6 +117,8 @@ class EnvPool:
         # part of the donated carry, so they stay valid across later steps.
         self._jit_reset = jax.jit(self._stateful_reset)
         self._jit_step = jax.jit(self._stateful_step, donate_argnums=(0,))
+        self._jit_step_key = jax.jit(self._stateful_step_key,
+                                     donate_argnums=(0,))
         self._rollout_cache: Dict[Tuple[int, bool], Callable] = {}
 
     # -- spaces / metadata ---------------------------------------------------
@@ -210,22 +213,78 @@ class EnvPool:
         ps, out = self._xla_step(PoolState(env_state, None, key), actions)
         return (ps.env_state, ps.key), out
 
+    def _stateful_step_key(self, carry, actions, key):
+        env_state, carry_key = carry
+        ps, out = self._xla_step(PoolState(env_state, None, carry_key),
+                                 actions, key)
+        return (ps.env_state, ps.key), out
+
     def reset(self, seed: int = 0) -> jax.Array:
         """(Re)initialise all envs; returns the batched observation."""
         self._carry, self._obs = self._jit_reset(jax.random.PRNGKey(seed))
         return self._obs
 
-    def step(self, actions) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
-        """Step every env once. Autoreset on done; state never leaves device."""
+    def step(self, actions,
+             key: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+        """Step every env once. Autoreset on done; state never leaves device.
+
+        `key` pins the per-step RNG stream explicitly (the carry chain is
+        left untouched) — `step(a, key=fold_in(k, t))` reproduces the raw
+        `Vec.step(state, a, fold_in(k, t))` trace bit-for-bit, which is how
+        the kill-and-resume tests replay the committed golden traces through
+        a supervised pool (tests/test_supervisor.py).
+        """
         if self._carry is None:
             raise RuntimeError("call reset() before step()")
-        self._carry, out = self._jit_step(self._carry, jnp.asarray(actions))
+        if key is None:
+            self._carry, out = self._jit_step(self._carry, jnp.asarray(actions))
+        else:
+            self._carry, out = self._jit_step_key(
+                self._carry, jnp.asarray(actions), key)
         self._obs = out.obs
         return out.obs, out.reward, out.done, out.info
 
     def sample_actions(self, seed: int = 0) -> jax.Array:
         return sample_batch(self.action_space, jax.random.PRNGKey(seed),
                             self.num_envs)
+
+    def step_lowered(self):
+        """Lower (don't run) the stateful step — for HLO inspection: the
+        fault suite certifies the supervised steady-state step path still
+        contains zero host-transfer instructions."""
+        if self._carry is None:
+            self.reset(seed=0)
+        acts = jnp.zeros((self.num_envs,) + tuple(self.action_space.shape),
+                         self.action_space.dtype)
+        return jax.jit(self._stateful_step).lower(self._carry, acts)
+
+    # -- snapshot / restore ----------------------------------------------------
+    # The survivable-rollout contract (runtime/supervisor.py): `state_dict()`
+    # is a HOST-materialized copy of the stateful carry — env state (with the
+    # AutoReset key chain inside), the fallback carry key, and the current
+    # obs — safe against XLA reusing the donated buffers on the next step.
+    # `load_state_dict()` re-places it on device; ShardedEnvPool overrides
+    # `_put_carry` so a gathered snapshot re-shards onto ANY mesh (the
+    # elastic contract of checkpoint/manager.py).
+    def state_dict(self) -> Dict[str, Any]:
+        """Host snapshot of the stateful carry (numpy leaves, copied)."""
+        if self._carry is None:
+            raise RuntimeError("call reset() before snapshotting the pool")
+        env_state, key = self._carry
+        tree = {"env_state": env_state, "key": key, "obs": self._obs}
+        return jax.tree.map(
+            lambda x: np.array(jax.device_get(x), copy=True), tree)
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        """Restore a `state_dict()` snapshot (possibly from another pool
+        instance — or, for sharded pools, another mesh)."""
+        d = self._put_carry(d)
+        self._carry = (d["env_state"], d["key"])
+        self._obs = d["obs"]
+
+    def _put_carry(self, d: Dict[str, Any]) -> Dict[str, Any]:
+        return jax.tree.map(jnp.asarray, d)
 
     # -- compiled whole-rollout fast path -------------------------------------
     def rollout(self, num_steps: int, key: jax.Array, render: bool = False):

@@ -17,10 +17,13 @@ pre-reset observation is surfaced as `info["terminal_obs"]`.
 from __future__ import annotations
 
 import os
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional, Union
 
 import numpy as np
+
+from repro.runtime.straggler import StragglerTracker
 
 
 class HostPool:
@@ -30,16 +33,27 @@ class HostPool:
     `seed(s)`, `reset() -> obs`, `step(a) -> (obs, r, done, info)` and
     `action_space_sample()` — the PythonRunner contract (core/runner.py) —
     or a registry id resolved through envs.baseline_python.BASELINES.
+
+    Straggler telemetry: interpreted envs are exactly where per-lane step
+    time varies (GC pauses, GIL contention, env-specific hot paths), so
+    every worker step is timed into a runtime/straggler.StragglerTracker
+    keyed by env index — `stragglers()` surfaces the profile/demote advice
+    for lanes persistently slower than the batch median. The clock is
+    injectable for deterministic tests.
     """
 
     def __init__(self, env_factory: Union[Callable, str], num_envs: int,
-                 num_workers: Optional[int] = None, seed: int = 0):
+                 num_workers: Optional[int] = None, seed: int = 0,
+                 tracker: Optional[StragglerTracker] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if isinstance(env_factory, str):
             from repro.envs.baseline_python import BASELINES
 
             env_factory = BASELINES[env_factory]
         self.env_factory = env_factory
         self.num_envs = int(num_envs)
+        self.tracker = tracker or StragglerTracker(num_hosts=self.num_envs)
+        self._clock = clock or time.monotonic
         self._envs = [env_factory() for _ in range(self.num_envs)]
         workers = num_workers or min(self.num_envs, os.cpu_count() or 1)
         self._exec = ThreadPoolExecutor(max_workers=workers)
@@ -72,8 +86,9 @@ class HostPool:
         actions = np.asarray(actions)
         if actions.shape[0] != self.num_envs:
             raise ValueError(f"actions batch {actions.shape[0]} != {self.num_envs} envs")
-        self._pending = [self._exec.submit(self._step_one, env, a)
-                         for env, a in zip(self._envs, actions)]
+        self._pending = [self._exec.submit(self._step_one, i, env, a)
+                         for i, (env, a) in enumerate(zip(self._envs,
+                                                          actions))]
 
     def recv(self):
         """Join the in-flight step: (obs, reward, done, info)."""
@@ -88,16 +103,24 @@ class HostPool:
         self.send(actions)
         return self.recv()
 
-    @staticmethod
-    def _step_one(env, action):
+    def _step_one(self, idx, env, action):
         if isinstance(action, np.ndarray) and action.ndim == 0:
             action = action.item()
+        t0 = self._clock()
         obs, reward, done, _ = env.step(action)
         terminal = np.asarray(obs, np.float32)
         if done:
             obs = env.reset()
+        # per-lane step time -> straggler EWMA (tracker.record is a dict
+        # write per key; lanes never share a key, so no lock needed)
+        self.tracker.record(idx, self._clock() - t0)
         return (np.asarray(obs, np.float32), np.float32(reward), bool(done),
                 terminal)
+
+    def stragglers(self):
+        """StragglerReports for lanes persistently above the median step
+        time (advice: "profile", then "demote" after `patience` strikes)."""
+        return self.tracker.reports()
 
     # -- random-policy harness (PythonRunner parity) ----------------------------
     def run_random(self, num_steps: int, seed: int = 0, render: bool = False):

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.env import Env
 from repro.core.wrappers import AutoReset, Vec
@@ -57,6 +57,22 @@ class ShardedEnvPool(EnvPool):
         self._local = Vec(AutoReset(self.env), self.num_envs // self.n_shards)
         self._bspec = P(self.axes)        # batch dim over the data axes
         self._cspec = P(None, self.axes)  # (K, B, ...) step-chunk arrays
+
+    def _put_carry(self, d):
+        """Re-place a (gathered, host) carry snapshot onto THIS pool's mesh:
+        batch-leading leaves shard over the data axes, the carry key
+        replicates. Snapshots are mesh-agnostic (checkpoint/manager.py), so
+        this is the rebuild-shardings leg of the elastic restore path — a
+        snapshot taken on a bigger mesh restores here unchanged."""
+        batch_sh = NamedSharding(self.mesh, self._bspec)
+        repl_sh = NamedSharding(self.mesh, P())
+        return {
+            "env_state": jax.tree.map(
+                lambda x: jax.device_put(np.asarray(x), batch_sh),
+                d["env_state"]),
+            "obs": jax.device_put(np.asarray(d["obs"]), batch_sh),
+            "key": jax.device_put(np.asarray(d["key"]), repl_sh),
+        }
 
     def _shard_key(self, key: jax.Array) -> jax.Array:
         """Per-shard RNG stream; identity on a 1-device mesh (exact parity)."""

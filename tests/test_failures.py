@@ -1,0 +1,159 @@
+"""Failure detection & the fault-injection harness (simulated clocks only).
+
+HeartbeatMonitor timeout/quorum semantics, FaultInjector exactly-once
+scheduled delivery, recovery planning over survivors, and the straggler
+telemetry wired through HostPool's worker steps — every clock here is
+scripted, so the tests are deterministic on any machine.
+"""
+import numpy as np
+import pytest
+
+from repro.pool.host import HostPool
+from repro.runtime.failures import (DeviceLossError, Fault, FaultInjector,
+                                    HeartbeatMonitor, plan_recovery)
+from repro.runtime.straggler import StragglerTracker
+
+
+# -- heartbeat monitor ---------------------------------------------------------
+
+def test_dead_host_revives_on_next_beat():
+    clk = [0.0]
+    mon = HeartbeatMonitor(3, timeout_s=5.0, clock=lambda: clk[0])
+    for h in range(3):
+        mon.beat(h, 1)
+    clk[0] = 10.0
+    mon.beat(0, 2)
+    mon.beat(1, 2)
+    assert mon.dead_hosts() == [2]
+    assert not mon.healthy()
+    mon.beat(2, 2)                       # silence ends: host is live again
+    assert mon.healthy()
+    assert mon.quorum_step() == 2
+
+
+def test_quorum_step_ignores_dead_hosts():
+    clk = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=2.0, clock=lambda: clk[0])
+    for h in range(4):
+        mon.beat(h, 10)
+    clk[0] = 1.0
+    for h in range(3):                   # host 3 stalls at step 10
+        mon.beat(h, 50)
+    assert mon.quorum_step() == 10       # still live: it drags the quorum
+    clk[0] = 2.5                         # host 3 silent > 2s; rest beat at 1.0
+    assert mon.dead_hosts() == [3]
+    assert mon.quorum_step() == 50       # dead: no longer counted
+
+
+def test_plan_recovery_notes_and_sizing():
+    clk = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=1.0, clock=lambda: clk[0])
+    for h in range(4):
+        mon.beat(h, 7)
+    clk[0] = 5.0
+    for h in (0, 2):
+        mon.beat(h, 9)
+    plan = plan_recovery(mon, devices_per_host=2, checkpoint_step=8)
+    assert plan.surviving_hosts == [0, 2]
+    assert plan.new_device_count == 4
+    assert plan.restart_step == 8
+    assert "[1, 3]" in plan.notes
+
+
+# -- fault injector ------------------------------------------------------------
+
+def test_faults_deliver_exactly_once_in_order():
+    clk = [0.0]
+    inj = FaultInjector(
+        faults=[Fault(3.0, "host_death", 1), Fault(1.0, "device_loss", 2)],
+        clock=lambda: clk[0])
+    assert inj.due() == []
+    clk[0] = 2.0
+    fired = inj.due()
+    assert [(f.kind, f.arg) for f in fired] == [("device_loss", 2)]
+    assert inj.due() == []               # exactly once
+    clk[0] = 10.0
+    assert [f.kind for f in inj.due()] == ["host_death"]
+    assert len(inj.fired()) == 2 and inj.pending() == []
+
+
+def test_due_kind_filter_leaves_other_kinds_pending():
+    clk = [5.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    inj.schedule(1.0, "stall", 7)
+    inj.schedule(2.0, "preempt_save")
+    assert [f.arg for f in inj.due(kinds=("stall",))] == [7]
+    assert [f.kind for f in inj.pending()] == ["preempt_save"]
+    assert [f.kind for f in inj.due()] == ["preempt_save"]
+
+
+def test_schedule_keeps_time_order():
+    clk = [100.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    inj.schedule(9.0, "b")
+    inj.schedule(1.0, "a")
+    inj.schedule(5.0, "c")
+    assert [f.kind for f in inj.due()] == ["a", "c", "b"]
+
+
+def test_device_loss_error_carries_count():
+    err = DeviceLossError(3)
+    assert err.n_lost == 3
+    assert "3 device" in str(err)
+    assert isinstance(err, RuntimeError)
+
+
+# -- straggler telemetry through HostPool --------------------------------------
+
+class _ClockedEnv:
+    """PythonRunner-contract env whose step() advances the scripted clock by
+    a per-instance amount — a deterministic slow lane."""
+
+    def __init__(self, clk, cost):
+        self.clk, self.cost = clk, cost
+
+    def seed(self, s):
+        pass
+
+    def reset(self):
+        return np.zeros(2, np.float32)
+
+    def step(self, action):
+        self.clk[0] += self.cost
+        return np.zeros(2, np.float32), 1.0, False, {}
+
+    def action_space_sample(self):
+        return 0
+
+
+def test_hostpool_times_lanes_and_flags_stragglers():
+    """Every worker step is timed into the tracker; the lane that takes 4x
+    the median gets profile->demote advice. num_workers=1 + scripted clock
+    keeps the EWMAs exactly reproducible."""
+    clk = [0.0]
+    costs = [1.0, 1.0, 4.0, 1.0]
+    made = iter(costs)
+    pool = HostPool(lambda: _ClockedEnv(clk, next(made)), num_envs=4,
+                    num_workers=1, clock=lambda: clk[0])
+    pool.reset()
+    for _ in range(4):                   # poll after each step, like a
+        pool.step(np.zeros(4, np.int32))  # monitoring loop: strikes accrue
+        reports = pool.stragglers()       # per evaluation
+    assert [r.host_id for r in reports] == [2]
+    assert reports[0].advice == "demote"        # patience=3 strikes hit
+    assert reports[0].ewma_s == pytest.approx(4.0)
+    assert reports[0].median_s == pytest.approx(1.0)
+    assert pool.tracker.hosts_to_demote() == [2]
+    pool.close()
+
+
+def test_hostpool_accepts_external_tracker():
+    clk = [0.0]
+    tr = StragglerTracker(threshold=2.0, patience=1)
+    pool = HostPool(lambda: _ClockedEnv(clk, 1.0), num_envs=2,
+                    num_workers=1, tracker=tr, clock=lambda: clk[0])
+    pool.reset()
+    pool.step(np.zeros(2, np.int32))
+    assert set(tr.ewma) == {0, 1}               # lanes registered lazily
+    assert pool.stragglers() == []              # equal lanes: nobody flagged
+    pool.close()

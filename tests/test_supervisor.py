@@ -1,0 +1,427 @@
+"""RolloutSupervisor: kill-and-resume against the committed goldens.
+
+The fault-tolerance contract is bit-identity, not "roughly resumes": a
+supervised rollout that is killed mid-flight, re-meshed and restored must
+produce EXACTLY the trajectory the uninterrupted run would have — proven
+here against the same committed 32-step checksums (tests/golden/) that pin
+the dynamics, for lock-step pools, the async send/recv engine, and (in a
+subprocess with 8 fake devices) a real 2-device -> 1-device re-mesh.
+
+Also here: the EnvService graceful-degradation paths — injected client
+stalls -> exponential backoff -> eviction -> reconnect resumes the episode
+bit-exactly, and drain-to-checkpoint -> restore-service preserves every
+in-flight session against an uninterrupted oracle service.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import make
+from repro.core.spaces import sample_batch
+from repro.launch.hlo_analysis import host_transfer_ops
+from repro.pool import AsyncEnvPool, EnvPool
+from repro.runtime import (DeviceLossError, FaultInjector, HeartbeatMonitor,
+                           RolloutSupervisor)
+from repro.serving.env_service import EnvService, Session
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+STEPS = 32
+BATCH = 2
+KILL_AT = 20        # mid-flight, after the step-16 snapshot
+SNAP_EVERY = 8
+
+# one classic-control id, one procedural grid id, one continuous-action id
+LOCKSTEP_IDS = ["CartPole-v1", "Maze-v0", "Pendulum-v1"]
+ASYNC_ID = "FrozenLake-v0"
+
+
+def _golden_rows(name):
+    want = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    return np.asarray(want["rows"], np.float64)
+
+
+def _row(obs, rew, done):
+    return [float(np.asarray(obs, np.float64).sum()),
+            float(np.asarray(rew, np.float64).sum()),
+            int(np.asarray(done).sum())]
+
+
+@pytest.mark.slow           # full 3-id golden sweep; the async variant below
+@pytest.mark.parametrize("name", LOCKSTEP_IDS)  # stays in the fast loop
+def test_kill_and_resume_matches_golden_lockstep(name, tmp_path):
+    """save -> injected device loss -> recover() -> restore resumes the
+    exact committed golden trajectory (EnvPool.step(key=) replays the
+    golden trace's per-step key chain deterministically)."""
+    env = make(name)
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    acts = [sample_batch(env.action_space, jax.random.fold_in(key, 1000 + t),
+                         BATCH) for t in range(STEPS)]
+
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    sup = RolloutSupervisor(EnvPool(env, BATCH), str(tmp_path),
+                            snapshot_every=SNAP_EVERY,
+                            blocking_snapshots=True, injector=inj)
+    sup.reset(seed=sum(map(ord, name)))
+    rows = [None] * STEPS
+    t = 0
+    killed = False
+    while t < STEPS:
+        if t == KILL_AT and not killed:
+            inj.schedule(0.5, "device_loss", 1)
+            clk[0] = 1.0
+        try:
+            obs, rew, done, _ = sup.step(acts[t],
+                                         key=jax.random.fold_in(key, t))
+        except DeviceLossError:
+            assert not killed, "fault fired twice"
+            killed = True
+            plan = sup.recover()
+            assert plan["restored_step"] == (KILL_AT // SNAP_EVERY) * SNAP_EVERY
+            t = sup.t           # rewind the deterministic stream
+            continue
+        rows[t] = _row(obs, rew, done)
+        t += 1
+    assert killed and sup.recoveries == 1
+    np.testing.assert_allclose(
+        np.asarray(rows, np.float64), _golden_rows(name),
+        rtol=1e-4, atol=1e-4,
+        err_msg=f"{name}: kill-and-resume trajectory drifted from the "
+                "committed golden trace")
+
+
+def test_kill_and_resume_matches_golden_async(tmp_path):
+    """The same proof through the async engine's send/recv: the supervisor
+    snapshots the whole slot table (active mask + key chains) and the
+    restored pool replays the golden recv-key stream bit-identically."""
+    name = ASYNC_ID
+    env = make(name)
+    key = jax.random.PRNGKey(sum(map(ord, name)))
+    acts = [np.asarray(sample_batch(env.action_space,
+                                    jax.random.fold_in(key, 1000 + t), BATCH))
+            for t in range(STEPS)]
+
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    sup = RolloutSupervisor(AsyncEnvPool(env, BATCH), str(tmp_path),
+                            snapshot_every=SNAP_EVERY,
+                            blocking_snapshots=True, injector=inj)
+    sup.reset(seed=sum(map(ord, name)))
+    rows = [None] * STEPS
+    t = 0
+    killed = False
+    while t < STEPS:
+        if t == KILL_AT and not killed:
+            inj.schedule(0.5, "device_loss", 1)
+            clk[0] = 1.0
+        try:
+            sup.send(acts[t], np.arange(BATCH))
+        except DeviceLossError:
+            assert not killed
+            killed = True
+            sup.recover()
+            t = sup.t
+            continue
+        obs, rew, done, _, _ = sup.recv(key=jax.random.fold_in(key, t))
+        rows[t] = _row(obs, rew, done)
+        t += 1
+    assert killed and sup.recoveries == 1
+    np.testing.assert_allclose(
+        np.asarray(rows, np.float64), _golden_rows(name),
+        rtol=1e-4, atol=1e-4,
+        err_msg=f"{name}: async kill-and-resume drifted from the committed "
+                "golden trace")
+
+
+def test_async_snapshot_refuses_inflight_actions(tmp_path):
+    pool = AsyncEnvPool("CartPole-v1", 2)
+    pool.reset(seed=0)
+    pool.send(np.zeros(2, np.int32), np.arange(2))
+    with pytest.raises(RuntimeError, match="in flight"):
+        pool.state_dict()
+    pool.recv(key=jax.random.PRNGKey(0))
+    pool.state_dict()  # step boundary: fine
+
+
+def test_monitor_times_out_host_killed_by_injector(tmp_path):
+    """A scripted "host_death" silences that host's heartbeat relay; the
+    monitor times it out exactly like a real silence and sizes recovery."""
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    mon = HeartbeatMonitor(4, timeout_s=5.0, clock=lambda: clk[0])
+    sup = RolloutSupervisor(EnvPool("CartPole-v1", 4), str(tmp_path),
+                            snapshot_every=4, blocking_snapshots=True,
+                            injector=inj, monitor=mon)
+    sup.reset(seed=0)
+    for _ in range(4):
+        sup.step(np.zeros(4, np.int32))
+    assert mon.healthy()
+    inj.schedule(1.0, "host_death", 3)
+    clk[0] = 2.0
+    sup.step(np.zeros(4, np.int32))      # fault consumed: host 3 goes silent
+    clk[0] = 10.0                        # > timeout since host 3's last beat
+    sup.step(np.zeros(4, np.int32))
+    assert mon.dead_hosts() == [3]
+    plan = sup.recover()                 # sized from the 3 survivors
+    assert plan["n_devices"] >= 1        # clamped to real local devices
+    assert "3" in plan["notes"]
+
+
+def test_supervised_step_path_stays_device_resident(tmp_path):
+    """Snapshots gather at boundaries; the compiled steady-state step the
+    supervisor drives must still contain zero host-transfer ops."""
+    sup = RolloutSupervisor(EnvPool("CartPole-v1", 8), str(tmp_path))
+    hlo = sup.step_lowered().compile().as_text()   # pool passthrough
+    assert host_transfer_ops(hlo) == []
+
+
+def test_snapshot_roundtrips_through_fresh_pool(tmp_path):
+    """Restore into a brand-new pool (the host-died-and-came-back path):
+    continuation is bit-identical to the original pool's continuation."""
+    key = jax.random.PRNGKey(3)
+    sup = RolloutSupervisor(EnvPool("MountainCar-v0", 4), str(tmp_path),
+                            snapshot_every=5, blocking_snapshots=True)
+    sup.reset(seed=3)
+    for t in range(5):
+        sup.step(np.zeros(4, np.int32), key=jax.random.fold_in(key, t))
+    ref = [np.asarray(sup.step(np.zeros(4, np.int32),
+                               key=jax.random.fold_in(key, t))[0]).copy()
+           for t in range(5, 8)]
+    sup2 = RolloutSupervisor(EnvPool("MountainCar-v0", 4), str(tmp_path))
+    sup2.restore()
+    assert sup2.t == 5
+    for t in range(5, 8):
+        obs, *_ = sup2.step(np.zeros(4, np.int32),
+                            key=jax.random.fold_in(key, t))
+        np.testing.assert_array_equal(np.asarray(obs), ref[t - 5])
+
+
+# -- elastic re-mesh (subprocess: needs >1 device) -----------------------------
+
+_REMESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, tempfile
+import jax, numpy as np
+from repro.pool import EnvPool, ShardedEnvPool
+from repro.runtime import DeviceLossError, FaultInjector, RolloutSupervisor
+
+B, SNAP, KILL, END = 8, 8, 12, 16
+key = jax.random.PRNGKey(0)
+d = tempfile.mkdtemp()
+clk = [0.0]
+inj = FaultInjector(clock=lambda: clk[0])
+mesh2 = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+pool = ShardedEnvPool("CartPole-v1", B, mesh=mesh2)
+sup = RolloutSupervisor(pool, d, snapshot_every=SNAP,
+                        blocking_snapshots=True, injector=inj)
+sup.reset(seed=0)
+devices_before = len(set(sup.pool.reset(seed=0).sharding.device_set))
+sup.reset(seed=0)
+for t in range(KILL):
+    sup.step(np.zeros(B, np.int32), key=jax.random.fold_in(key, t))
+
+# oracle: load the step-8 snapshot into a plain single-device EnvPool and
+# replay 8..16 (a 1-device mesh is bit-identical to EnvPool by contract)
+oracle = EnvPool("CartPole-v1", B)
+osup = RolloutSupervisor(oracle, d)
+osup.restore(step=SNAP)
+ref = []
+for t in range(SNAP, END):
+    obs, *_ = osup.step(np.zeros(B, np.int32), key=jax.random.fold_in(key, t))
+    ref.append(np.asarray(obs).copy())
+
+inj.schedule(1.0, "device_loss", 1)
+clk[0] = 2.0
+try:
+    sup.step(np.zeros(B, np.int32), key=jax.random.fold_in(key, KILL))
+    raise SystemExit("expected DeviceLossError")
+except DeviceLossError:
+    plan = sup.recover(n_devices=1)   # survivors: one device
+got = []
+for t in range(sup.t, END):
+    obs, *_ = sup.step(np.zeros(B, np.int32), key=jax.random.fold_in(key, t))
+    got.append(np.asarray(obs).copy())
+devices_after = len(sup.pool.mesh.devices.flatten())
+
+bit_identical = all(np.array_equal(a, b) for a, b in zip(ref, got))
+print(json.dumps({
+    "devices_before": devices_before,
+    "devices_after": devices_after,
+    "restored_step": plan["restored_step"],
+    "mesh_shape": list(plan["mesh_shape"]),
+    "bit_identical": bool(bit_identical),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_device_loss_remesh_resumes_bit_identically():
+    """2-device sharded rollout -> injected device loss -> propose_mesh over
+    the 1 survivor -> restore: continuation equals the single-device oracle
+    bit-for-bit (8 fake CPU devices, subprocess)."""
+    out = subprocess.run([sys.executable, "-c", _REMESH_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=_env())
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices_before"] == 2
+    assert res["devices_after"] == 1
+    assert res["restored_step"] == 8
+    assert res["bit_identical"]
+
+
+def _env():
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
+# -- EnvService graceful degradation ------------------------------------------
+
+def _pol(obs, t):
+    return np.int32(t % 2)
+
+
+def test_service_stall_backoff_then_eviction_then_reconnect():
+    """Injected client stalls: exponential backoff idles the lane, repeated
+    misses evict it (lane parked off-device), reconnect() resumes the
+    episode so the final result matches an undisturbed solo session."""
+    clk = [0.0]
+    inj = FaultInjector(clock=lambda: clk[0])
+    svc = EnvService("CartPole-v1", 2, clock=lambda: clk[0], injector=inj,
+                     max_retries=2)
+    for i in range(3):
+        svc.submit(Session(sid=i, seed=i, num_steps=12, policy=_pol))
+    for _ in range(3):
+        svc.tick()
+    for at in (1.0, 2.0, 3.0):   # 3 misses > max_retries=2 -> eviction
+        inj.schedule(at, "stall", 1)
+    t = 0
+    while 1 not in svc._evicted and t < 40:
+        clk[0] += 1.0
+        svc.tick()
+        t += 1
+    assert svc.evicted == [1]
+    assert svc._sessions[1].steps < 12
+    assert svc.stats()["timeouts"] == 3
+    assert "timeout" in svc.eviction_log[1]
+
+    svc.run(max_ticks=200)       # others finish; slot 1 was refilled
+    assert svc._sessions[0].steps == 12
+    assert svc._sessions[2].steps == 12
+    svc.reconnect(1)
+    svc.run(max_ticks=200)
+    assert svc._sessions[1].steps == 12
+
+    solo = EnvService("CartPole-v1", 2, clock=lambda: clk[0])
+    solo.submit(Session(sid=1, seed=1, num_steps=12, policy=_pol))
+    solo.run()
+    assert svc._sessions[1].total_reward == solo._sessions[1].total_reward
+    assert svc._sessions[1].episodes == solo._sessions[1].episodes
+
+
+def test_service_slow_client_times_out_via_clock():
+    """A measured action round-trip over `action_timeout_s` counts as a
+    miss even without an injector (the action is stale: discarded)."""
+    clk = [0.0]
+
+    def slow_policy(obs, t):
+        clk[0] += 2.0            # the client "takes" 2s to answer
+        return np.int32(0)
+
+    svc = EnvService("CartPole-v1", 1, clock=lambda: clk[0],
+                     action_timeout_s=1.0, max_retries=1)
+    svc.submit(Session(sid=0, seed=0, num_steps=5, policy=slow_policy))
+    for _ in range(8):
+        svc.tick()
+    assert svc.evicted == [0]
+    assert svc._sessions[0].steps == 0   # no stale action was ever applied
+
+
+def test_service_drain_to_checkpoint_and_restore_matches_oracle(tmp_path):
+    """Service restart preserves every in-flight session: drain to a
+    checkpoint mid-serve, rebuild from it, finish — results identical to an
+    uninterrupted oracle service (same sessions, same slots, same order)."""
+    clk = [0.0]
+    svc = EnvService("CartPole-v1", 2, clock=lambda: clk[0])
+    for i in range(4):
+        svc.submit(Session(sid=i, seed=i, num_steps=10, policy=_pol))
+    for _ in range(4):
+        svc.tick()
+    mid_steps = {i: svc._sessions[i].steps for i in range(4)}
+    assert any(v > 0 for v in mid_steps.values())
+    assert any(v == 0 for v in mid_steps.values())  # some still queued
+    with CheckpointManager(str(tmp_path)) as mgr:
+        svc.drain_to_checkpoint(mgr, step=svc.ticks)
+    with pytest.raises(RuntimeError, match="draining"):
+        svc.submit(Session(sid=99, seed=9, num_steps=3))
+
+    fresh = [Session(sid=i, seed=i, num_steps=10, policy=_pol)
+             for i in range(4)]
+    svc2 = EnvService.restore_service(
+        "CartPole-v1", 2, CheckpointManager(str(tmp_path)), fresh,
+        clock=lambda: clk[0])
+    assert {i: svc2._sessions[i].steps for i in range(4)} == mid_steps
+    svc2.run(max_ticks=200)
+
+    oracle = EnvService("CartPole-v1", 2, clock=lambda: clk[0])
+    for i in range(4):
+        oracle.submit(Session(sid=i, seed=i, num_steps=10, policy=_pol))
+    oracle.run(max_ticks=200)
+    for i in range(4):
+        a, b = svc2._sessions[i], oracle._sessions[i]
+        assert (a.steps, a.total_reward, a.episodes) == \
+               (b.steps, b.total_reward, b.episodes), i
+
+
+def test_service_restore_preserves_default_policy_rng(tmp_path):
+    """Un-scripted clients sample from a numpy generator; its bit-state is
+    checkpointed, so even random-policy sessions resume bit-exactly."""
+    clk = [0.0]
+    svc = EnvService("FrozenLake-v0", 2, clock=lambda: clk[0])
+    for i in range(2):
+        svc.submit(Session(sid=i, seed=100 + i, num_steps=9))
+    for _ in range(5):
+        svc.tick()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        svc.drain_to_checkpoint(mgr, step=5)
+    svc2 = EnvService.restore_service(
+        "FrozenLake-v0", 2, CheckpointManager(str(tmp_path)),
+        [Session(sid=i, seed=100 + i, num_steps=9) for i in range(2)],
+        clock=lambda: clk[0])
+    svc2.run(max_ticks=100)
+    oracle = EnvService("FrozenLake-v0", 2, clock=lambda: clk[0])
+    for i in range(2):
+        oracle.submit(Session(sid=i, seed=100 + i, num_steps=9))
+    oracle.run(max_ticks=100)
+    for i in range(2):
+        a, b = svc2._sessions[i], oracle._sessions[i]
+        assert (a.total_reward, a.episodes) == (b.total_reward, b.episodes)
+
+
+def test_service_restore_rejects_missing_sessions_and_bad_slots(tmp_path):
+    clk = [0.0]
+    svc = EnvService("CartPole-v1", 2, clock=lambda: clk[0])
+    svc.submit(Session(sid=0, seed=0, num_steps=5, policy=_pol))
+    svc.tick()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        svc.drain_to_checkpoint(mgr, step=1)
+    with pytest.raises(ValueError, match="missing"):
+        EnvService.restore_service("CartPole-v1", 2,
+                                   CheckpointManager(str(tmp_path)), [],
+                                   clock=lambda: clk[0])
+    with pytest.raises(ValueError, match="slots"):
+        EnvService.restore_service(
+            "CartPole-v1", 4, CheckpointManager(str(tmp_path)),
+            [Session(sid=0, seed=0, num_steps=5, policy=_pol)],
+            clock=lambda: clk[0])
