@@ -3,17 +3,28 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-async test-conformance test-fault api-check bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-async test-conformance test-fault api-check lint analyze bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
 # Skip the heavy fused/pool sweeps and training-parity tests (marked `slow`)
 # for a quick inner-loop signal; `make test` remains the tier-1 gate.
-# Runs the API-surface snapshot first: a broken drop-in surface should fail
-# in seconds, not after the whole sweep.
-test-fast: api-check
+# Runs the API-surface snapshot first (a broken drop-in surface should fail
+# in seconds, not after the whole sweep), then the static-analysis gate.
+test-fast: api-check analyze
 	$(PY) -m pytest -x -q -m "not slow"
+
+# JAX-aware AST lint only (sub-second; the inner-inner loop).
+lint:
+	$(PY) -m repro.analysis.lint src
+
+# Static-analysis gate: the AST lint over src/ plus the registry-driven
+# compiled-artifact audit (every env id x backend lowered and checked for
+# zero host transfers, full carry donation, and bounded jit retraces).
+# Fails on any unallowlisted violation; see docs/analysis.md.
+analyze: lint
+	$(PY) -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json
 
 # CI gate: the public exports of repro / repro.core / repro.pool / cairl
 # match the checked-in snapshot (tests/test_api_surface.py) — refactors
@@ -51,14 +62,16 @@ bench-smoke: bench-json
 
 # Machine-readable perf record: fig1 (steps/s per backend, vmap vs fused
 # pallas megastep), fig4 (batch/device scaling), fig_async (continuous
-# slot refill vs lock-step wave serving) and fig_fault (checkpointing tax,
-# snapshot amortization, device-loss recovery time) in smoke mode.
+# slot refill vs lock-step wave serving), fig_fault (checkpointing tax,
+# snapshot amortization, device-loss recovery time) and the HLO audit
+# (per-id residency/donation/flops rows), all in smoke mode.
 bench-json:
 	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
 	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024 \
 		--json BENCH_fig4.json
 	$(PY) benchmarks/fig_async.py --smoke --json BENCH_fig_async.json
 	$(PY) benchmarks/fig_fault.py --smoke --json BENCH_fig_fault.json
+	$(PY) -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json
 
 # Full paper-figure reproduction (CSV to stdout; slow).
 bench:

@@ -1,0 +1,61 @@
+"""repro.analysis — static-analysis gates for the JAX/Pallas stack.
+
+The paper's efficiency claim rests on invariants the test suite can only
+spot-check: zero host transfers on compiled step paths, full donation of
+the XLA-resident carry, no silent recompilation, bit-exact PRNG key
+chains, and lock-guarded shared state in the threaded serving layer. This
+package enforces them mechanically, in three passes behind one `make
+analyze` gate:
+
+  - `repro.analysis.lint`  : AST lint — JAX-specific source rules
+    (PRNG key reuse, host reads inside jitted code, use-after-donate,
+    Python branches on tracers, unguarded cross-thread mutation, silent
+    exception swallows, non-monotonic timing). `# repro: allow[rule]`
+    pragmas mark intentional, documented exceptions.
+  - `repro.analysis.audit` : compiled-artifact audit — lowers the actual
+    step program for every registry id x backend (vmap / pallas / async /
+    sharded) and gates zero host-transfer instructions, 100% carry
+    donation, and a bounded jit-trace count (the async recv-size
+    respecialization hazard as a named budget, not folklore). Emits the
+    machine-readable `BENCH_hlo_audit.json` report.
+  - `repro.analysis.retrace` : the reusable `RetraceGuard` wrapper the
+    audit (and any runtime loop) uses to turn silent recompiles into
+    loud `RetraceError`s.
+
+CLI entry points (what `make analyze` runs):
+
+  python -m repro.analysis.lint src
+  python -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json
+"""
+__all__ = [
+    "RULES",
+    "RetraceError",
+    "RetraceGuard",
+    "Violation",
+    "lint_paths",
+    "lint_source",
+]
+
+# Lazy (PEP 562) so `python -m repro.analysis.lint` doesn't import the
+# submodule twice (runpy's "found in sys.modules" warning) and importing
+# the package for RULES alone stays dependency-free.
+_EXPORTS = {
+    "RULES": "repro.analysis.rules",
+    "Violation": "repro.analysis.rules",
+    "lint_paths": "repro.analysis.lint",
+    "lint_source": "repro.analysis.lint",
+    "RetraceError": "repro.analysis.retrace",
+    "RetraceGuard": "repro.analysis.retrace",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,278 @@
+"""Compiled-artifact audit: lower every env id × backend, gate the HLO.
+
+`python -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json`
+
+This generalizes `launch/hlo_analysis.py` from the per-test ad-hoc asserts
+(fig4 / test_pool / fig_async each checked one pool) into a registry-driven
+sweep. For every registered env id × every pool backend it lowers the
+*donated* compiled step program — `pool._jit_step`, the one the stateful
+fast path actually dispatches (`step_lowered()` re-jits without donation
+and would audit the wrong artifact) — and gates three invariants:
+
+  residency : `host_transfer_ops(compiled)` is empty — no infeed/outfeed/
+              send/recv/callback custom-call on the step path;
+  donation  : every carry leaf parameter carries `tf.aliasing_output` in
+              the lowered StableHLO (donation *intent* survives on CPU
+              even where the runtime drops the aliasing itself);
+  retraces  : executing the async send/recv path across ready-set sizes
+              1, 2 and N owns at most `RETRACE_BUDGET["async"]` jit
+              traces. PR 6 moved recv row-selection host-side precisely
+              so the ready-set size never re-specializes the program;
+              this turns that from folklore into a named, gated fact.
+
+Backends that cannot host an id refuse by *named* exception — a pallas
+cell on an env without fused megastep support raises ValueError, exactly
+as `EnvPool(backend="pallas")` documents — and the refusal is recorded as
+a row (`status: "refused"`), so the report still covers the full registry
+(the same hosted-or-named-refusal contract the conformance matrix uses).
+Unexpected refusal classes are violations.
+
+The JSON report (`BENCH_hlo_audit.json`) is machine-readable: one row per
+(id, backend) with residency/donation/flops/bytes, a `violations` list,
+and `ok`. Exit status is nonzero iff any violation is unallowlisted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.retrace import trace_count
+from repro.core.env import supports_fused_step
+from repro.core.registry import make, registered
+from repro.launch.hlo_analysis import (analyze_hlo, donated_params,
+                                       host_transfer_ops)
+
+#: pool flavors audited per id (the four step-dispatch paths of the stack)
+BACKENDS = ("vmap", "pallas", "async", "sharded")
+
+#: refusal classes that are legitimate "this backend cannot host this id"
+#: answers rather than bugs (mirrors the conformance matrix contract)
+EXPECTED_REFUSALS = ("ValueError", "AsyncUnsupportedError")
+
+#: named allowlisted retrace facts: jit-trace budget per backend. The async
+#: budget of 1 IS the PR-6 recv-size respecialization fix — recv masks on
+#: device and row-selects host-side, so ready-set size never retraces.
+RETRACE_BUDGET: Dict[str, int] = {"async": 1}
+
+#: ids whose async retrace budget is *executed* (not just lowered) in smoke
+#: mode — one classic control env, one tabular env, one pixel env
+RETRACE_SMOKE_IDS = ("CartPole-v1", "FrozenLake-v0", "Pong-raw")
+
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _sds(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+
+
+def _build_pool(env_id: str, backend: str, batch: int):
+    """Construct the pool flavor under audit (may raise a refusal)."""
+    if backend == "vmap":
+        from repro.pool.envpool import EnvPool
+        return EnvPool(env_id, batch, backend="vmap")
+    if backend == "pallas":
+        from repro.pool.envpool import EnvPool
+        return EnvPool(env_id, batch, backend="pallas")
+    if backend == "async":
+        from repro.pool.async_pool import AsyncEnvPool
+        return AsyncEnvPool(env_id, batch, backend="auto")
+    if backend == "sharded":
+        from repro.pool.sharded import ShardedEnvPool, default_pool_mesh
+        return ShardedEnvPool(env_id, batch, mesh=default_pool_mesh(1))
+    raise ValueError(f"unknown audit backend {backend!r}")
+
+
+def _lower_step(pool, backend: str):
+    """Lower the *donated* step program with abstract args (no execution).
+
+    Shapes come from `jax.eval_shape` over the pool's own init path, so the
+    audited carry is exactly the one the stateful fast path donates.
+    """
+    acts = _sds(pool.sample_actions(0))
+    if backend == "async":
+        carry = jax.eval_shape(pool._init_impl, _KEY_SDS)
+        active = jax.ShapeDtypeStruct((pool.num_slots,), jnp.bool_)
+        return pool._jit_step.lower(carry, acts, active, _KEY_SDS), carry
+    carry, _ = jax.eval_shape(pool._stateful_reset, _KEY_SDS)
+    return pool._jit_step.lower(carry, acts), carry
+
+
+def _run_async_retrace(env_id: str, slots: int) -> int:
+    """Execute the send/recv path across ready-set sizes 1, 2 and `slots`;
+    return how many jit traces `_jit_step` owns afterwards."""
+    from repro.pool.async_pool import AsyncEnvPool
+
+    pool = AsyncEnvPool(env_id, slots, backend="auto")
+    sids = [pool.admit(seed=i)[0] for i in range(slots)]
+    acts = jax.device_get(pool.sample_actions(0))
+    for ready in (sids[:1], sids[:2], sids):
+        pool.send(acts[: len(ready)], ready)
+        pool.recv()
+    return trace_count(pool._jit_step) or 0
+
+
+def audit_cell(env_id: str, backend: str, batch: int,
+               run_retrace: bool = False) -> Dict[str, Any]:
+    """Audit one (id, backend) cell; returns its report row."""
+    row: Dict[str, Any] = {"id": env_id, "backend": backend, "batch": batch}
+    try:
+        pool = _build_pool(env_id, backend, batch)
+        lowered, carry = _lower_step(pool, backend)
+    except Exception as e:  # repro: allow[silent-except] named-refusal protocol: class+message recorded in the row, judged against EXPECTED_REFUSALS
+        row.update(status="refused", refusal=type(e).__name__,
+                   refusal_msg=str(e).splitlines()[0][:200])
+        return row
+
+    carry_leaves = len(jax.tree.leaves(carry))
+    donated = donated_params(lowered.as_text())
+    hlo = lowered.compile().as_text()
+    transfers = host_transfer_ops(hlo)
+    analysis = analyze_hlo(hlo)
+    row.update(
+        status="ok",
+        carry_params=carry_leaves,
+        donated_params=len([p for p in donated if p < carry_leaves]),
+        donation=(len([p for p in donated if p < carry_leaves])
+                  / max(carry_leaves, 1)),
+        host_transfer_ops=transfers,
+        flops=analysis.flops,
+        bytes=analysis.bytes,
+    )
+    if run_retrace and backend in RETRACE_BUDGET:
+        row["retraces"] = _run_async_retrace(env_id, batch)
+        row["retrace_budget"] = RETRACE_BUDGET[backend]
+    return row
+
+
+def row_violations(row: Dict[str, Any]) -> List[str]:
+    """Gate one row; returns human-readable violation strings (empty = ok)."""
+    tag = f"{row['id']}×{row['backend']}"
+    if row["status"] == "refused":
+        if row["refusal"] in EXPECTED_REFUSALS:
+            return []
+        return [f"{tag}: unexpected refusal {row['refusal']}: "
+                f"{row.get('refusal_msg', '')}"]
+    out = []
+    if row["host_transfer_ops"]:
+        out.append(f"{tag}: {len(row['host_transfer_ops'])} host-transfer "
+                   f"op(s) on the compiled step path: "
+                   f"{row['host_transfer_ops'][:3]}")
+    if row["donation"] < 1.0:
+        out.append(f"{tag}: carry donation {row['donated_params']}/"
+                   f"{row['carry_params']} — step does not donate its full "
+                   "carry")
+    if "retraces" in row and row["retraces"] > row["retrace_budget"]:
+        out.append(f"{tag}: {row['retraces']} jit traces exceed the "
+                   f"allowlisted budget of {row['retrace_budget']} "
+                   "(ready-set-size respecialization?)")
+    return out
+
+
+def plan(ids: Optional[Sequence[str]] = None,
+         backends: Sequence[str] = BACKENDS) -> List[Tuple[str, str]]:
+    """The full audit matrix: every registry id × every backend."""
+    ids = list(ids) if ids else sorted(registered())
+    return [(i, b) for i in ids for b in backends]
+
+
+def run(ids: Optional[Sequence[str]] = None,
+        backends: Sequence[str] = BACKENDS, batch: int = 4,
+        smoke: bool = True, progress=None) -> Dict[str, Any]:
+    """Run the sweep; returns the report dict (see module docstring)."""
+    cells = plan(ids, backends)
+    retrace_ids = (set(RETRACE_SMOKE_IDS) if smoke
+                   else {i for i in {c[0] for c in cells}
+                         if supports_fused_step(make(i))})
+    rows, violations = [], []
+    for env_id, backend in cells:
+        row = audit_cell(env_id, backend, batch,
+                         run_retrace=(backend in RETRACE_BUDGET
+                                      and env_id in retrace_ids))
+        rows.append(row)
+        violations.extend(row_violations(row))
+        if progress:
+            progress(row)
+    hosted = [r for r in rows if r["status"] == "ok"]
+    report = {
+        "meta": {
+            "smoke": smoke,
+            "batch": batch,
+            "jax": jax.__version__,
+            "platform": jax.default_backend(),
+            "backends": list(backends),
+            "ids": sorted({c[0] for c in cells}),
+            "retrace_budget": dict(RETRACE_BUDGET),
+        },
+        "rows": rows,
+        "summary": {
+            "cells": len(rows),
+            "hosted": len(hosted),
+            "refused": len(rows) - len(hosted),
+            "fully_donated": sum(r["donation"] == 1.0 for r in hosted),
+            "host_resident": sum(not r["host_transfer_ops"] for r in hosted),
+        },
+        "violations": violations,
+        "ok": not violations,
+    }
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="registry-driven compiled-artifact audit "
+                    "(residency / donation / retrace gates)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small batch, retrace execution on the smoke ids "
+                         "only (the make-analyze / bench-json mode)")
+    ap.add_argument("--ids", default="",
+                    help="comma-separated id subset (default: full registry)")
+    ap.add_argument("--backends", default=",".join(BACKENDS),
+                    help=f"comma-separated backend subset of {BACKENDS}")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="envs/slots per pool (default: 4 smoke, 16 full)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the report as JSON")
+    args = ap.parse_args(argv)
+    ids = [i.strip() for i in args.ids.split(",") if i.strip()] or None
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    if unknown := set(backends) - set(BACKENDS):
+        ap.error(f"unknown backends {sorted(unknown)}; expected {BACKENDS}")
+    batch = args.batch or (4 if args.smoke else 16)
+
+    def progress(row):
+        status = row["status"]
+        if status == "ok":
+            detail = (f"donated {row['donated_params']}/{row['carry_params']}"
+                      f", {len(row['host_transfer_ops'])} host op(s)")
+            if "retraces" in row:
+                detail += (f", {row['retraces']}/{row['retrace_budget']} "
+                           "traces")
+        else:
+            detail = f"refused: {row['refusal']}"
+        print(f"  {row['id']:>18} × {row['backend']:<7} {status:<7} {detail}",
+              flush=True)
+
+    report = run(ids=ids, backends=backends, batch=batch, smoke=args.smoke,
+                 progress=progress)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    s = report["summary"]
+    print(f"repro.analysis.audit: {s['cells']} cells "
+          f"({s['hosted']} hosted, {s['refused']} refused), "
+          f"{s['fully_donated']}/{s['hosted']} fully donated, "
+          f"{s['host_resident']}/{s['hosted']} host-transfer-free, "
+          f"{len(report['violations'])} violation(s)")
+    for v in report["violations"]:
+        print(f"  VIOLATION: {v}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,632 @@
+"""JAX-aware AST lint over the source tree (`python -m repro.analysis.lint`).
+
+One module is analyzed at a time; all reasoning is module-local and
+heuristic by design — the goal is to catch the failure modes that have
+actually bitten this stack (key reuse, host reads traced into compiled
+code, donated-buffer aliasing, tracer branches, unlocked shared state)
+with zero runtime cost and no imports of the linted code.
+
+Per module the linter builds:
+  - an import-alias table, so `jnp.where`, `jax.numpy.where` and
+    `from jax import numpy as jnp` all canonicalize to `jax.numpy.where`;
+  - the set of *jit roots*: functions decorated with `jax.jit` /
+    `partial(jax.jit, ...)` plus anything passed to a `jax.jit(...)` call
+    (`jax.jit(self._step_impl, donate_argnums=(0,))` marks `_step_impl`);
+  - a name-level call graph, walked from the roots to the set of
+    *jit-reachable* functions (the scope of the tracer-sensitive rules);
+  - the table of *donating callables*: names/attributes bound to
+    `jax.jit(..., donate_argnums=...)`, with their donated positions.
+
+Rules are documented in `repro.analysis.rules.RULES`; intentional sites
+carry a `# repro: allow[rule]` pragma (same line or the line above).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import RULES, Violation, pragma_lines
+
+# attribute reads that are static under tracing (safe in a Python branch)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "weak_type"}
+
+# canonical producers whose results are tracer-valued inside jit
+_TRACER_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.",
+                    "jax.scipy.")
+
+# canonical producers of PRNG keys (assignment RHS types a name as a key)
+_KEY_PRODUCERS = {"jax.random.PRNGKey", "jax.random.key", "jax.random.split",
+                  "jax.random.fold_in", "jax.random.clone"}
+
+# canonical calls that read host state a jit trace would freeze
+_HOST_READS = {"time.time", "time.time_ns", "time.monotonic",
+               "time.monotonic_ns", "time.perf_counter",
+               "time.perf_counter_ns", "time.process_time", "os.getenv",
+               "os.environ.get", "datetime.datetime.now",
+               "datetime.datetime.utcnow", "open", "input"}
+_HOST_READ_PREFIXES = ("random.", "numpy.random.")
+
+_LOCK_FACTORIES = {"threading.Lock", "threading.RLock", "threading.Condition",
+                   "threading.Semaphore", "threading.BoundedSemaphore"}
+
+_LOG_MARKERS = ("print", "warn", "log", "record", "report")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Imports:
+    """Alias table: first path component rewritten to its imported target."""
+
+    def __init__(self, tree: ast.Module):
+        self.table: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.table[(a.asname or a.name.split(".")[0])] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.table[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def canon(self, dotted: Optional[str]) -> Optional[str]:
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        head = self.table.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def canon_call(self, call: ast.Call) -> Optional[str]:
+        return self.canon(_dotted(call.func))
+
+
+def _stmt_children(stmt: ast.stmt) -> List[ast.stmt]:
+    """Nested statements of a compound statement (not new scopes)."""
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    out: List[ast.stmt] = []
+    for field in ("body", "orelse", "finalbody"):
+        out.extend(getattr(stmt, field, []) or [])
+    for h in getattr(stmt, "handlers", []) or []:
+        out.extend(h.body)
+    return out
+
+
+def _flat_stmts(body: Sequence[ast.stmt]) -> Iterable[ast.stmt]:
+    """All statements of a function body in source order, same scope only."""
+    for st in body:
+        yield st
+        yield from _flat_stmts(_stmt_children(st))
+
+
+def _header_nodes(stmt: ast.stmt) -> List[ast.AST]:
+    """The statement's own expressions — child exprs, not nested statements."""
+    return [n for n in ast.iter_child_nodes(stmt)
+            if isinstance(n, (ast.expr, ast.withitem, ast.ExceptHandler))
+            and not isinstance(n, (ast.Lambda,))]
+
+
+def _walk_exprs(nodes: Iterable[ast.AST]) -> Iterable[ast.AST]:
+    for n in nodes:
+        for sub in ast.walk(n):
+            # lambdas are separate (deferred) scopes; their bodies don't
+            # execute at this statement
+            if isinstance(sub, ast.Lambda):
+                continue
+            yield sub
+
+
+def _store_names(stmt: ast.stmt) -> Set[str]:
+    """Bare names (re)bound by this statement."""
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.With):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+def _store_keys(stmt: ast.stmt) -> Set[Tuple[str, str]]:
+    """(kind, name) keys (re)bound: bare names and `self.attr` targets."""
+    out: Set[Tuple[str, str]] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(("name", n.id))
+            elif (isinstance(n, ast.Attribute)
+                  and isinstance(n.value, ast.Name) and n.value.id == "self"):
+                out.add(("self", n.attr))
+    return out
+
+
+def _is_jax_jit(node: ast.AST, imports: _Imports) -> bool:
+    return imports.canon(_dotted(node)) == "jax.jit"
+
+
+def _donate_positions(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+    return ()
+
+
+class _Module:
+    """Per-module analysis context shared by all rules."""
+
+    def __init__(self, tree: ast.Module, source: str, path: str):
+        self.tree = tree
+        self.path = path
+        self.imports = _Imports(tree)
+        self.pragmas = pragma_lines(source)
+        self.violations: List[Violation] = []
+        self.funcs: List[ast.FunctionDef] = [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        self.by_name: Dict[str, List[ast.FunctionDef]] = {}
+        for f in self.funcs:
+            self.by_name.setdefault(f.name, []).append(f)
+        self.donators = self._find_donators()
+        self.jit_reachable = self._jit_reachable()
+
+    # -- shared infrastructure -------------------------------------------
+    def report(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        allowed = self.pragmas.get(line, set())
+        if rule in allowed or "*" in allowed:
+            return
+        self.violations.append(Violation(
+            self.path, line, getattr(node, "col_offset", 0), rule, message))
+
+    def _find_donators(self) -> Dict[Tuple[str, str], Tuple[int, ...]]:
+        """(kind, name) -> donated positions, for every binding of a
+        `jax.jit(..., donate_argnums=...)` result to a name or self attr."""
+        out: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            if not (isinstance(v, ast.Call) and _is_jax_jit(v.func, self.imports)):
+                continue
+            pos = _donate_positions(v)
+            if not pos:
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[("name", t.id)] = pos
+                elif (isinstance(t, ast.Attribute)
+                      and isinstance(t.value, ast.Name)
+                      and t.value.id == "self"):
+                    out[("self", t.attr)] = pos
+        return out
+
+    def _jit_roots(self) -> Set[str]:
+        roots: Set[str] = set()
+        for f in self.funcs:
+            for dec in f.decorator_list:
+                if _is_jax_jit(dec, self.imports):
+                    roots.add(f.name)
+                elif isinstance(dec, ast.Call):
+                    if _is_jax_jit(dec.func, self.imports):
+                        roots.add(f.name)
+                    elif (self.imports.canon(_dotted(dec.func))
+                          in ("functools.partial", "partial")
+                          and dec.args
+                          and _is_jax_jit(dec.args[0], self.imports)):
+                        roots.add(f.name)
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) and _is_jax_jit(node.func, self.imports):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        roots.add(arg.id)
+                    elif isinstance(arg, ast.Attribute):
+                        roots.add(arg.attr)
+        return roots
+
+    def _called_names(self, f: ast.FunctionDef) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(f):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Name):
+                    out.add(node.func.id)
+                elif isinstance(node.func, ast.Attribute):
+                    v = node.func.value
+                    if isinstance(v, ast.Name) and v.id == "self":
+                        out.add(node.func.attr)
+        return out
+
+    def _jit_reachable(self) -> Set[ast.FunctionDef]:
+        seen: Set[str] = set()
+        frontier = list(self._jit_roots())
+        reachable: Set[ast.FunctionDef] = set()
+        while frontier:
+            name = frontier.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            for f in self.by_name.get(name, []):
+                reachable.add(f)
+                frontier.extend(self._called_names(f))
+        return reachable
+
+    # -- rules ------------------------------------------------------------
+    def run(self) -> List[Violation]:
+        for f in self.funcs:
+            self._rule_key_reuse(f)
+            self._rule_use_after_donate(f)
+            if f in self.jit_reachable:
+                self._rule_host_read(f)
+                self._rule_tracer_branch(f)
+        self._rule_unguarded_mutation()
+        self._rule_silent_except()
+        self._rule_wall_clock()
+        self._check_pragma_rules()
+        return self.violations
+
+    def _check_pragma_rules(self) -> None:
+        seen: Set[Tuple[int, str]] = set()
+        for line, rules in self.pragmas.items():
+            for r in rules - set(RULES) - {"*"}:
+                if (line, r) in seen or (line - 1, r) in seen:
+                    continue
+                seen.add((line, r))
+                self.violations.append(Violation(
+                    self.path, line, 0, "silent-except",
+                    f"pragma names unknown rule {r!r} (known: "
+                    f"{sorted(RULES)})"))
+
+    def _rule_key_reuse(self, f: ast.FunctionDef) -> None:
+        """A locally-derived key consumed by >1 call without a re-derive."""
+        key_names: Set[str] = set()
+        uses: Dict[str, int] = {}
+        for stmt in _flat_stmts(f.body):
+            header = _header_nodes(stmt)
+            # 1) consumptions in this statement's expressions
+            for node in _walk_exprs(header):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = self.imports.canon_call(node) or ""
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in key_names:
+                        uses[arg.id] = uses.get(arg.id, 0) + 1
+                        if uses[arg.id] == 2:
+                            self.report(
+                                "key-reuse", node,
+                                f"PRNG key {arg.id!r} consumed more than once "
+                                f"(second consumer: {callee or 'call'}); "
+                                "split/fold_in a fresh key per consumer")
+            # 2) (re)bindings: key-producing RHS types the targets as keys,
+            #    anything else untypes them
+            stores = _store_names(stmt)
+            produced = False
+            if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+                produced = (self.imports.canon_call(stmt.value)
+                            in _KEY_PRODUCERS)
+            elif (isinstance(stmt, ast.Assign)
+                  and isinstance(stmt.value, ast.Subscript)
+                  and isinstance(stmt.value.value, ast.Call)):
+                produced = (self.imports.canon_call(stmt.value.value)
+                            in _KEY_PRODUCERS)
+            for name in stores:
+                uses[name] = 0
+                if produced:
+                    key_names.add(name)
+                else:
+                    key_names.discard(name)
+
+    def _rule_use_after_donate(self, f: ast.FunctionDef) -> None:
+        if not self.donators:
+            return
+        dead: Dict[Tuple[str, str], int] = {}  # key -> donating line
+        for stmt in _flat_stmts(f.body):
+            header = _header_nodes(stmt)
+            # 1) reads of already-donated values
+            for node in _walk_exprs(header):
+                key = None
+                if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                    key = ("name", node.id)
+                elif (isinstance(node, ast.Attribute)
+                      and isinstance(node.value, ast.Name)
+                      and node.value.id == "self"
+                      and isinstance(node.ctx, ast.Load)):
+                    key = ("self", node.attr)
+                if key in dead:
+                    what = key[1] if key[0] == "name" else f"self.{key[1]}"
+                    self.report(
+                        "use-after-donate", node,
+                        f"{what} was donated on line {dead[key]} and read "
+                        "here — XLA may already have reused its buffers")
+            # 2) donations made by calls in this statement
+            for node in _walk_exprs(header):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee_key = None
+                if isinstance(node.func, ast.Name):
+                    callee_key = ("name", node.func.id)
+                elif (isinstance(node.func, ast.Attribute)
+                      and isinstance(node.func.value, ast.Name)
+                      and node.func.value.id == "self"):
+                    callee_key = ("self", node.func.attr)
+                pos = self.donators.get(callee_key or ("", ""))
+                if not pos:
+                    continue
+                for p in pos:
+                    if p >= len(node.args):
+                        continue
+                    arg = node.args[p]
+                    if isinstance(arg, ast.Name):
+                        dead[("name", arg.id)] = node.lineno
+                    elif (isinstance(arg, ast.Attribute)
+                          and isinstance(arg.value, ast.Name)
+                          and arg.value.id == "self"):
+                        dead[("self", arg.attr)] = node.lineno
+            # 3) rebindings resurrect
+            for key in _store_keys(stmt):
+                dead.pop(key, None)
+
+    def _rule_host_read(self, f: ast.FunctionDef) -> None:
+        for node in ast.walk(f):
+            name = None
+            if isinstance(node, ast.Call):
+                name = self.imports.canon_call(node)
+            elif isinstance(node, (ast.Attribute, ast.Subscript)):
+                d = self.imports.canon(_dotted(node))
+                if d == "os.environ":
+                    name = d
+            if name is None:
+                continue
+            if name in _HOST_READS or name.startswith(_HOST_READ_PREFIXES):
+                self.report(
+                    "host-read-in-jit", node,
+                    f"{name} inside jit-reachable `{f.name}` — the read "
+                    "happens once at trace time, not per step")
+
+    def _rule_tracer_branch(self, f: ast.FunctionDef) -> None:
+        tracer_names: Set[str] = set()
+        for stmt in _flat_stmts(f.body):
+            if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+                callee = self.imports.canon_call(stmt.value) or ""
+                if callee.startswith(_TRACER_PREFIXES):
+                    tracer_names |= _store_names(stmt)
+            elif isinstance(stmt, ast.Assign):
+                # non-call RHS: conservatively untype reassigned names
+                tracer_names -= _store_names(stmt)
+            if not isinstance(stmt, (ast.If, ast.While)):
+                continue
+            bad = self._tracer_in_test(stmt.test, tracer_names)
+            if bad:
+                self.report(
+                    "tracer-branch", stmt,
+                    f"Python {'if' if isinstance(stmt, ast.If) else 'while'} "
+                    f"on tracer-valued {bad} in jit-reachable `{f.name}`; "
+                    "use jnp.where / lax.cond")
+
+    def _tracer_in_test(self, test: ast.expr, tracer_names: Set[str]
+                        ) -> Optional[str]:
+        parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(test):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        for node in ast.walk(test):
+            if isinstance(node, ast.Call):
+                callee = self.imports.canon_call(node) or ""
+                if callee.startswith(_TRACER_PREFIXES):
+                    return callee
+            if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                    and node.id in tracer_names):
+                parent = parents.get(node)
+                if (isinstance(parent, ast.Attribute)
+                        and parent.attr in _STATIC_ATTRS):
+                    continue  # x.shape / x.ndim are static under tracing
+                return node.id
+        return None
+
+    def _rule_unguarded_mutation(self) -> None:
+        for cls in ast.walk(self.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = self._lock_attrs(cls)
+            if not locks:
+                continue
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if meth.name == "__init__":
+                    continue
+                self._scan_mutations(meth, locks, guarded=False)
+
+    def _lock_attrs(self, cls: ast.ClassDef) -> Set[str]:
+        locks: Set[str] = set()
+        for node in ast.walk(cls):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            if self.imports.canon_call(node.value) not in _LOCK_FACTORIES:
+                continue
+            for t in node.targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    locks.add(t.attr)
+        return locks
+
+    def _scan_mutations(self, node, locks: Set[str], guarded: bool) -> None:
+        for stmt in (node.body if hasattr(node, "body") else []):
+            now_guarded = guarded
+            if isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    d = _dotted(item.context_expr)
+                    if d and d.startswith("self.") and d[5:] in locks:
+                        now_guarded = True
+            if not now_guarded and isinstance(
+                    stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets: List[ast.AST] = (
+                    list(stmt.targets) if isinstance(stmt, ast.Assign)
+                    else [stmt.target])
+                # descend into tuple/list unpacking targets
+                flat: List[ast.AST] = []
+                while targets:
+                    t = targets.pop()
+                    if isinstance(t, (ast.Tuple, ast.List)):
+                        targets.extend(t.elts)
+                    else:
+                        flat.append(t)
+                for t in flat:
+                    base = t
+                    while isinstance(base, (ast.Subscript, ast.Starred)):
+                        base = base.value
+                    if (isinstance(base, ast.Attribute)
+                            and isinstance(base.value, ast.Name)
+                            and base.value.id == "self"
+                            and base.attr not in locks):
+                        self.report(
+                            "unguarded-mutation", stmt,
+                            f"self.{base.attr} mutated outside "
+                            f"`with self.{sorted(locks)[0]}:` in a "
+                            "lock-owning class")
+            # recurse into nested statements with the (possibly) new guard
+            for child in _stmt_children(stmt):
+                self._scan_mutations_stmt(child, locks, now_guarded)
+
+    def _scan_mutations_stmt(self, stmt: ast.stmt, locks: Set[str],
+                             guarded: bool) -> None:
+        class _Shim:
+            body = [stmt]
+        self._scan_mutations(_Shim, locks, guarded)
+
+    def _rule_silent_except(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not self._is_broad(node.type):
+                continue
+            if self._handler_is_loud(node):
+                continue
+            self.report(
+                "silent-except", node,
+                "broad except swallows the error silently — narrow the "
+                "exception type, or log and re-raise the unexpected")
+
+    def _is_broad(self, type_node: Optional[ast.expr]) -> bool:
+        if type_node is None:
+            return True
+        names = ([type_node] if not isinstance(type_node, ast.Tuple)
+                 else list(type_node.elts))
+        for n in names:
+            if self.imports.canon(_dotted(n)) in ("Exception", "BaseException"):
+                return True
+        return False
+
+    def _handler_is_loud(self, handler: ast.ExceptHandler) -> bool:
+        for node in ast.walk(handler):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call):
+                d = (self.imports.canon_call(node) or "").lower()
+                if any(m in d for m in _LOG_MARKERS):
+                    return True
+        return False
+
+    def _rule_wall_clock(self) -> None:
+        for node in ast.walk(self.tree):
+            if (isinstance(node, ast.Call)
+                    and self.imports.canon_call(node) == "time.time"):
+                self.report(
+                    "wall-clock", node,
+                    "time.time() is not monotonic; use time.perf_counter() "
+                    "for durations (time.monotonic() for deadlines)")
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Set[str]] = None) -> List[Violation]:
+    """Lint one module's source; `select` restricts to a subset of rules."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 1, e.offset or 0, "silent-except",
+                          f"syntax error: {e.msg}")]
+    out = _Module(tree, source, path).run()
+    if select is not None:
+        out = [v for v in out if v.rule in select]
+    return sorted(out, key=lambda v: (v.path, v.line, v.col))
+
+
+def lint_paths(paths: Iterable[str],
+               select: Optional[Set[str]] = None) -> List[Violation]:
+    """Lint every `.py` file under `paths` (files or directories)."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    out: List[Violation] = []
+    for path in sorted(set(files)):
+        with open(path, encoding="utf-8") as f:
+            out.extend(lint_source(f.read(), path, select=select))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX-aware AST lint (rules: %s)" % ", ".join(sorted(RULES)))
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write violations as JSON")
+    args = ap.parse_args(argv)
+    select = {r.strip() for r in args.select.split(",") if r.strip()} or None
+    if select and (unknown := select - set(RULES)):
+        ap.error(f"unknown rules {sorted(unknown)}; known: {sorted(RULES)}")
+    violations = lint_paths(args.paths, select=select)
+    for v in violations:
+        print(v)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([v.__dict__ for v in violations], f, indent=2)
+    n = len(violations)
+    print(f"repro.analysis.lint: {n} violation{'s' if n != 1 else ''} in "
+          f"{', '.join(args.paths)}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

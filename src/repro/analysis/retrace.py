@@ -1,0 +1,86 @@
+"""Retrace guard: turn silent jit recompiles into loud errors.
+
+`jax.jit` retraces whenever it sees a new (shape, dtype, static-arg)
+signature. On the hot step path that is almost always a bug — a shape
+leak, a weak-type flip, a Python scalar where an array was meant — and it
+costs a full lower+compile, silently. `RetraceGuard` wraps a jitted
+callable with an explicit *trace budget*: the number of distinct
+signatures the call site is allowed to own. Exceeding it raises
+`RetraceError` at the exact call that triggered the extra trace, instead
+of showing up later as a mysteriously slow benchmark.
+
+The audit sweep uses the same budget notion statically: the async pool's
+recv path is allowlisted at budget 1 (PR 6 pinned the ready-set-size
+respecialization hazard by moving row selection host-side), and the audit
+fails if any pool's step function ever owns more traces than its budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+
+class RetraceError(RuntimeError):
+    """A guarded jit function exceeded its trace budget."""
+
+    def __init__(self, name: str, budget: int, traces: int):
+        self.name = name
+        self.budget = budget
+        self.traces = traces
+        super().__init__(
+            f"{name}: {traces} distinct jit traces exceed the budget of "
+            f"{budget} — a call-site signature is unstable (shape/dtype/"
+            "static-arg leak). Stabilize the inputs or raise the budget "
+            "explicitly if the extra specialization is intentional.")
+
+
+def trace_count(jitted: Any) -> Optional[int]:
+    """Number of compiled specializations a jitted callable holds, if
+    the wrapper exposes it (None on foreign callables)."""
+    probe = getattr(jitted, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except TypeError:  # property-style on some jax versions
+        return int(probe)
+
+
+class RetraceGuard:
+    """Wrap a `jax.jit`-ed callable and enforce a trace budget per call.
+
+    >>> step = RetraceGuard(jax.jit(fn), budget=1, name="envpool.step")
+    >>> step(carry, actions)          # first call: traces, ok
+    >>> step(carry, actions)          # cached, ok
+    >>> step(bad_shaped, actions)     # RetraceError
+
+    The check runs after each call, so the offending call completes (its
+    result is not lost) but the guard fails before the next one.
+    """
+
+    def __init__(self, jitted: Callable[..., Any], budget: int = 1,
+                 name: Optional[str] = None):
+        if trace_count(jitted) is None:
+            raise TypeError(
+                "RetraceGuard needs a jax.jit-wrapped callable exposing "
+                "_cache_size(); got %r" % (jitted,))
+        self._fn = jitted
+        self.budget = int(budget)
+        self.name = name or getattr(jitted, "__name__", repr(jitted))
+        functools.update_wrapper(self, jitted, updated=())
+
+    @property
+    def traces(self) -> int:
+        return trace_count(self._fn) or 0
+
+    def check(self) -> int:
+        """Raise RetraceError if over budget; return the trace count."""
+        n = self.traces
+        if n > self.budget:
+            raise RetraceError(self.name, self.budget, n)
+        return n
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        out = self._fn(*args, **kwargs)
+        self.check()
+        return out

@@ -1,0 +1,87 @@
+"""Rule catalog + pragma grammar for the JAX-aware AST lint.
+
+Each rule names one invariant the compiled stack depends on. The catalog is
+data (`RULES`), so the CLI, the docs generator and the pragma validator all
+answer from one table. Intentional violations are allowlisted in source:
+
+    risky_line()   # repro: allow[rule-name] why this is safe here
+
+The pragma applies to its own line and to the line directly below it (so it
+can sit on its own line above a multi-line statement). Several rules can be
+listed comma-separated: `# repro: allow[key-reuse,tracer-branch] ...`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, Set
+
+#: rule id -> one-line description (the catalog docs/analysis.md renders)
+RULES: Dict[str, str] = {
+    "key-reuse": (
+        "a locally-derived PRNG key is consumed by two calls (or used again "
+        "after being split) — every consumer must get its own split/fold_in"),
+    "host-read-in-jit": (
+        "wall-clock, Python random, numpy.random or environment reads inside "
+        "a function reachable from jax.jit in this module — the value freezes "
+        "at trace time and breaks deterministic resume"),
+    "use-after-donate": (
+        "a value passed in a donated argument position is read after the "
+        "donating call — its buffer may already be reused by XLA"),
+    "tracer-branch": (
+        "Python if/while on a value produced by jnp/lax/random inside a "
+        "jit-reachable function — branches on tracers raise at trace time or "
+        "silently specialize"),
+    "unguarded-mutation": (
+        "shared attribute mutated outside the owning class's lock/condition "
+        "in a class that synchronizes with threading primitives"),
+    "silent-except": (
+        "broad `except Exception` (or bare except) that neither re-raises "
+        "nor logs — unexpected errors vanish"),
+    "wall-clock": (
+        "time.time() used for timing — wall clock can step backwards; use "
+        "time.perf_counter() (durations) or time.monotonic() (deadlines)"),
+}
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_,\s\-]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+def pragma_lines(source: str) -> Dict[int, Set[str]]:
+    """Line number -> rule ids allowlisted on that line.
+
+    A pragma on line L covers violations reported at L and L+1; unknown rule
+    names in a pragma are themselves reported by the linter (a typo'd pragma
+    that silently allowlists nothing is worse than no pragma).
+    """
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return out
+    # only real COMMENT tokens carry pragmas — a pragma *example* quoted in
+    # a docstring (like the one above) must not allowlist anything
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _PRAGMA_RE.search(tok.string)
+        if not m:
+            continue
+        i = tok.start[0]
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        out.setdefault(i + 1, set()).update(rules)
+    return out

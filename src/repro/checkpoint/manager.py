@@ -110,6 +110,7 @@ class CheckpointManager:
         else:
             # non-daemon: interpreter exit joins the write instead of
             # dropping it mid-file
+            # repro: allow[unguarded-mutation] single-writer contract: save()/wait()/close() run on one owner thread; _write_lock only serializes the directory writes
             self._thread = threading.Thread(
                 target=self._run_write, args=(write,),
                 name=f"ckpt-save-{step}", daemon=False)
@@ -119,21 +120,22 @@ class CheckpointManager:
     def _run_write(self, write) -> None:
         try:
             write()
-        except BaseException as e:  # surfaced on the next wait()/save()
+        except BaseException as e:  # repro: allow[silent-except,unguarded-mutation] not swallowed: stored and re-raised by wait(); the store is ordered before the owner's join()
             self._error = e
 
     def wait(self) -> None:
         """Join the in-flight write; re-raise its error, if any."""
         if self._thread is not None:
             self._thread.join()
-            self._thread = None
+            self._thread = None  # repro: allow[unguarded-mutation] owner-thread bookkeeping; join() above is the happens-before for _error
         if self._error is not None:
+            # repro: allow[unguarded-mutation] owner thread only, after join()
             err, self._error = self._error, None
             raise err
 
     def close(self) -> None:
         """Join pending writes and refuse further saves."""
-        self._closed = True
+        self._closed = True  # repro: allow[unguarded-mutation] owner-thread latch; save() checks it on the same thread
         self.wait()
 
     def __enter__(self) -> "CheckpointManager":

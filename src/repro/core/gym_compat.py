@@ -71,7 +71,7 @@ class GymCompat:
         self._step = jax.jit(env.step)
         try:
             self._render = jax.jit(env.render)
-        except Exception:  # env without renderer
+        except Exception:  # repro: allow[silent-except] renderer probe: any failure here just means "no render support", surfaced as render() -> None
             self._render = None
 
     # -- Gym API ---------------------------------------------------------

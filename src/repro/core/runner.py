@@ -132,6 +132,7 @@ def rollout_random_fast(
         state, rew, eps, frame = carry
         k = jax.random.fold_in(key, i)
         action = sample_batch(space, k, batch_size)
+        # repro: allow[key-reuse] same chain as EnvPool._rollout: action-sample and step share the per-step key so runner/pool rollouts stay bit-comparable
         ts = venv.step(state, action, k)
         frame = venv.render(ts.state) if render else frame
         return (ts.state, rew + ts.reward, eps + ts.done.astype(jnp.int32), frame), None

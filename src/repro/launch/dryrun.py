@@ -93,8 +93,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 def _memory_analysis(compiled) -> Dict[str, float]:
     try:
         ma = compiled.memory_analysis()
-    except Exception:
-        return {}
+    except (AttributeError, NotImplementedError):
+        return {}  # backend exposes no memory stats; anything else raises
     out = {}
     for attr in ("argument_size_in_bytes", "output_size_in_bytes",
                  "temp_size_in_bytes", "generated_code_size_in_bytes",
@@ -167,14 +167,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) 
                 "status": "skipped", "reason": skip}
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     jitted, args = build_cell(arch, shape, mesh)
     with mesh:
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-    cost = dict(compiled.cost_analysis() or {})
+        t_compile = time.perf_counter() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0]
+    cost = dict(cost)
     mem = _memory_analysis(compiled)
     from repro.launch.hlo_analysis import analyze_hlo
 

@@ -295,3 +295,38 @@ def analyze_hlo(hlo_text: str, entry: Optional[str] = None) -> Analysis:
     c = dict(c)
     c["total"] = sum(c.values())
     return Analysis(flops=f, bytes=b, collectives=c, entry=entry)
+
+
+_MAIN_SIG_RE = re.compile(r"@main\s*\(")
+_ARG_SPLIT_RE = re.compile(r"%arg(\d+)\s*:")
+
+
+def donated_params(lowered_text: str) -> List[int]:
+    """Parameter indices with `tf.aliasing_output` in a lowered StableHLO text.
+
+    `jax.jit(..., donate_argnums=...)` stamps every donated parameter of the
+    lowered module's `@main` signature with a `tf.aliasing_output = N` attr —
+    on every platform, even where the runtime later drops the actual aliasing
+    (CPU). That makes the *lowered* text, not the compiled binary, the right
+    place to audit donation intent. Parsing note: the attr dict can nest
+    braces (`mhlo.sharding = "{replicated}"`), so the signature is split on
+    `%argN:` boundaries and each chunk is substring-checked rather than
+    brace-matched.
+    """
+    m = _MAIN_SIG_RE.search(lowered_text)
+    if not m:
+        return []
+    # balance parens from the signature's open paren; quoted attr strings in
+    # practice never contain parens, so a plain depth count suffices
+    depth, i = 1, m.end()
+    while i < len(lowered_text) and depth:
+        depth += {"(": 1, ")": -1}.get(lowered_text[i], 0)
+        i += 1
+    sig = lowered_text[m.end():i - 1]
+    chunks = _ARG_SPLIT_RE.split(sig)
+    # chunks = [prefix, idx0, body0, idx1, body1, ...]
+    out = []
+    for idx, body in zip(chunks[1::2], chunks[2::2]):
+        if "tf.aliasing_output" in body:
+            out.append(int(idx))
+    return sorted(out)

@@ -119,10 +119,10 @@ def compile_cell(arch: str, shape_name: str, knobs: Dict, multi_pod: bool = Fals
                     jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=tsh),
                     jax.ShapeDtypeStruct((), jnp.int32))
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         with mesh:
             compiled = jitted.lower(*args).compile()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
     finally:
         layers_mod.chunked_cross_entropy.__defaults__ = old_ce
         attn_mod.gqa_apply.__kwdefaults__["q_chunk"] = old_q
@@ -211,8 +211,8 @@ def measure(arch: str, shape_name: str, variant: str, multi_pod: bool = False) -
         ma = compiled.memory_analysis()
         mem = {"temp_gib": ma.temp_size_in_bytes / 2**30,
                "args_gib": ma.argument_size_in_bytes / 2**30}
-    except Exception:
-        pass
+    except (AttributeError, NotImplementedError):
+        pass  # backend exposes no memory stats; anything else should raise
     from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
     from repro.configs.base import shape_by_name as _sbn

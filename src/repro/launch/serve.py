@@ -45,9 +45,9 @@ def main():
     ]
     for r in reqs:
         engine.submit(r)
-    t0 = time.time()
+    t0 = time.perf_counter()
     engine.run(max_ticks=args.requests * (args.max_new + 4))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tokens = sum(len(r.output or []) for r in reqs)
     print(f"{args.arch}: served {len(reqs)} requests / {tokens} tokens in {dt:.2f}s "
           f"({tokens / dt:,.1f} tok/s, {args.slots}-slot continuous batching)")

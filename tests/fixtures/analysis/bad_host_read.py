@@ -1,0 +1,12 @@
+import random
+import time
+
+import jax
+
+
+def step(state):
+    jitter = random.random() + time.monotonic()
+    return state + jitter
+
+
+compiled_step = jax.jit(step)

@@ -1,0 +1,8 @@
+import jax
+
+
+def rollout(key, obs):
+    k = jax.random.split(key, 2)[0]
+    action = jax.random.categorical(k, obs)
+    noise = jax.random.normal(k, obs.shape)  # same k consumed twice
+    return action, noise

@@ -1,0 +1,10 @@
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_reward(reward):
+    total = jnp.sum(reward)
+    if total > 10.0:  # Python branch on a tracer
+        return reward / total
+    return reward

@@ -1,0 +1,12 @@
+import threading
+
+
+class SlotTable:
+    def __init__(self, n):
+        self._lock = threading.Lock()
+        self._active = [False] * n
+        self._epoch = 0
+
+    def activate(self, i):
+        self._active[i] = True  # racing with reads under self._lock
+        self._epoch += 1

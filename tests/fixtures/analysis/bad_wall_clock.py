@@ -1,0 +1,7 @@
+import time
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0

@@ -1,0 +1,8 @@
+import jax
+
+
+def rollout(key, obs):
+    ka, kn = jax.random.split(key)
+    action = jax.random.categorical(ka, obs)
+    noise = jax.random.normal(kn, obs.shape)
+    return action, noise

@@ -1,0 +1,6 @@
+def load(path):
+    try:
+        with open(path) as f:
+            return f.read()
+    except FileNotFoundError:
+        return None

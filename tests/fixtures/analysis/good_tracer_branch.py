@@ -1,0 +1,10 @@
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_reward(reward):
+    total = jnp.sum(reward)
+    if reward.ndim > 1:  # static under tracing: shape metadata
+        reward = reward.reshape(-1)
+    return jnp.where(total > 10.0, reward / total, reward)

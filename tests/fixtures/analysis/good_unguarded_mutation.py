@@ -1,0 +1,13 @@
+import threading
+
+
+class SlotTable:
+    def __init__(self, n):
+        self._lock = threading.Lock()
+        self._active = [False] * n
+        self._epoch = 0
+
+    def activate(self, i):
+        with self._lock:
+            self._active[i] = True
+            self._epoch += 1

@@ -1,0 +1,11 @@
+import jax
+
+
+class Pool:
+    def __init__(self, fn):
+        self._step = jax.jit(fn, donate_argnums=(0,))
+
+    def run(self, carry, actions):
+        new_carry, out = self._step(carry, actions)
+        fresh = new_carry[0] + 1
+        return new_carry, out, fresh

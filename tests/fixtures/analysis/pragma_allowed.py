@@ -1,0 +1,9 @@
+import time
+
+
+def timed(fn):
+    t0 = time.time()  # repro: allow[wall-clock] exercising the pragma path
+    out = fn()
+    # repro: allow[wall-clock] pragma on the line above a violation
+    t1 = time.time()
+    return out, t1 - t0

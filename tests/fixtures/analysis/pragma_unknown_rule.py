@@ -1,0 +1,6 @@
+import time
+
+
+def timed(fn):
+    t0 = time.time()  # repro: allow[wallclock] typo'd rule id: allowlists nothing, and is itself reported
+    return fn(), t0

@@ -1,0 +1,223 @@
+"""repro.analysis: lint rules, pragmas, retrace guard, and the HLO audit.
+
+Three layers of coverage:
+
+  1. Rule-by-rule: every lint rule has a checked-in known-bad fixture that
+     trips exactly that rule and a known-good twin that stays clean
+     (tests/fixtures/analysis/) — the proof that `make analyze` actually
+     fails on each pattern it claims to gate.
+  2. Gate: the repo's own `src/` tree lints clean (zero unallowlisted
+     violations) — the satellite fixes of this PR, held in place.
+  3. Audit: the registry sweep covers every id × backend (hosted or named
+     refusal, the conformance-matrix contract), one cheap end-to-end cell
+     proves residency+donation on a real compiled step, and the async
+     retrace budget — the PR-6 recv-size respecialization fact — is
+     executed, not just asserted.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import RULES, RetraceError, RetraceGuard, lint_paths, lint_source
+from repro.analysis.audit import (BACKENDS, EXPECTED_REFUSALS, RETRACE_BUDGET,
+                                  audit_cell, plan, row_violations)
+from repro.analysis.retrace import trace_count
+from repro.analysis.rules import pragma_lines
+from repro.core.registry import registered
+from repro.launch.hlo_analysis import donated_params
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+RULE_FIXTURE = {
+    "key-reuse": "key_reuse",
+    "host-read-in-jit": "host_read",
+    "use-after-donate": "use_after_donate",
+    "tracer-branch": "tracer_branch",
+    "unguarded-mutation": "unguarded_mutation",
+    "silent-except": "silent_except",
+    "wall-clock": "wall_clock",
+}
+
+
+def _lint_fixture(name):
+    path = os.path.join(FIXTURES, name)
+    with open(path) as f:
+        return lint_source(f.read(), path)
+
+
+# -- 1. rule-by-rule fixtures -------------------------------------------------
+
+def test_every_rule_has_a_fixture_pair():
+    assert set(RULE_FIXTURE) == set(RULES)
+    for stem in RULE_FIXTURE.values():
+        assert os.path.exists(os.path.join(FIXTURES, f"bad_{stem}.py"))
+        assert os.path.exists(os.path.join(FIXTURES, f"good_{stem}.py"))
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_bad_fixture_trips_its_rule(rule):
+    hits = _lint_fixture(f"bad_{RULE_FIXTURE[rule]}.py")
+    assert any(v.rule == rule for v in hits), (
+        f"bad_{RULE_FIXTURE[rule]}.py should trip [{rule}]; got {hits}")
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_good_fixture_stays_clean(rule):
+    hits = _lint_fixture(f"good_{RULE_FIXTURE[rule]}.py")
+    assert not [v for v in hits if v.rule == rule], (
+        f"good_{RULE_FIXTURE[rule]}.py false-positives [{rule}]: {hits}")
+
+
+# -- pragmas ------------------------------------------------------------------
+
+def test_pragma_allowlists_same_and_next_line():
+    assert _lint_fixture("pragma_allowed.py") == []
+
+
+def test_pragma_with_unknown_rule_is_reported_and_allows_nothing():
+    hits = _lint_fixture("pragma_unknown_rule.py")
+    rules = {v.rule for v in hits}
+    assert "wall-clock" in rules        # the typo'd pragma allowed nothing
+    assert any("unknown rule" in v.message for v in hits)
+
+
+def test_pragma_in_docstring_is_inert():
+    src = '"""docs show `# repro: allow[wall-clock]` usage"""\n' \
+          "import time\n\n\ndef f():\n    return time.time()\n"
+    assert any(v.rule == "wall-clock" for v in lint_source(src))
+    assert pragma_lines(src) == {}
+
+
+def test_pragma_multiple_rules():
+    src = ("import time\n\n\ndef f():\n"
+           "    return time.time()  # repro: allow[wall-clock,key-reuse] x\n")
+    assert lint_source(src) == []
+
+
+# -- 2. the gate: repo lints clean, CLI exit codes ---------------------------
+
+def test_repo_source_tree_is_clean():
+    hits = lint_paths([SRC])
+    assert hits == [], "\n".join(str(v) for v in hits)
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         os.path.join(FIXTURES, "bad_wall_clock.py")],
+        env=env, capture_output=True, text=True)
+    assert bad.returncode == 1 and "[wall-clock]" in bad.stdout
+    good = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         os.path.join(FIXTURES, "good_wall_clock.py")],
+        env=env, capture_output=True, text=True)
+    assert good.returncode == 0
+
+
+# -- retrace guard ------------------------------------------------------------
+
+def test_retrace_guard_enforces_budget():
+    step = RetraceGuard(jax.jit(lambda x: x * 2), budget=1, name="toy.step")
+    step(jnp.ones((4,), jnp.float32))
+    step(jnp.zeros((4,), jnp.float32))          # cached: same signature
+    assert step.traces == 1
+    with pytest.raises(RetraceError) as e:
+        step(jnp.ones((8,), jnp.float32))       # new shape: second trace
+    assert e.value.traces == 2 and e.value.budget == 1
+
+
+def test_retrace_guard_rejects_plain_functions():
+    with pytest.raises(TypeError):
+        RetraceGuard(lambda x: x)
+
+
+def test_trace_count_none_on_foreign_callables():
+    assert trace_count(print) is None
+
+
+# -- donation parser ----------------------------------------------------------
+
+def test_donated_params_survives_nested_brace_attrs():
+    sig = ('module @jit_step {\n'
+           '  func.func public @main('
+           '%arg0: tensor<4xf32> {mhlo.sharding = "{replicated}", '
+           'tf.aliasing_output = 0 : i32}, '
+           '%arg1: tensor<2xui32> {tf.aliasing_output = 1 : i32}, '
+           '%arg2: tensor<4xf32> {mhlo.sharding = "{replicated}"}) '
+           '-> (tensor<4xf32>, tensor<2xui32>) {\n')
+    assert donated_params(sig) == [0, 1]
+    assert donated_params("no main signature here") == []
+
+
+# -- 3. the audit sweep -------------------------------------------------------
+
+def test_audit_plan_covers_every_registry_id_and_backend():
+    cells = plan()
+    ids = {c[0] for c in cells}
+    assert ids == set(registered())
+    for env_id in ids:
+        assert {b for i, b in cells if i == env_id} == set(BACKENDS)
+
+
+def test_audit_cell_end_to_end_vmap():
+    row = audit_cell("CartPole-v1", "vmap", batch=4)
+    assert row["status"] == "ok"
+    assert row["host_transfer_ops"] == []
+    assert row["donation"] == 1.0
+    assert row["flops"] >= 0
+    assert row_violations(row) == []
+
+
+def test_audit_cell_refusal_is_named():
+    # Pendulum has no fused megastep kernel -> the pallas cell must refuse
+    # with the documented class, and the refusal is not a violation.
+    from repro.core.env import supports_fused_step
+    from repro.core.registry import make
+    unfused = next(i for i in sorted(registered())
+                   if not supports_fused_step(make(i)))
+    row = audit_cell(unfused, "pallas", batch=4)
+    assert row["status"] == "refused"
+    assert row["refusal"] in EXPECTED_REFUSALS
+    assert row_violations(row) == []
+
+
+def test_row_violations_gate():
+    base = {"id": "X-v0", "backend": "vmap", "status": "ok",
+            "host_transfer_ops": [], "donation": 1.0, "donated_params": 2,
+            "carry_params": 2}
+    assert row_violations(base) == []
+    assert row_violations({**base, "host_transfer_ops": ["e/cc:custom-call"]})
+    assert row_violations({**base, "donation": 0.5, "donated_params": 1})
+    assert row_violations({**base, "retraces": 2, "retrace_budget": 1})
+    assert not row_violations({**base, "retraces": 1, "retrace_budget": 1})
+    refused = {"id": "X-v0", "backend": "pallas", "status": "refused",
+               "refusal": "ValueError", "refusal_msg": "no fused support"}
+    assert row_violations(refused) == []
+    assert row_violations({**refused, "refusal": "ZeroDivisionError"})
+
+
+@pytest.mark.slow
+def test_async_retrace_budget_is_a_fact():
+    # The PR-6 claim, executed: stepping ready sets of size 1, 2 and N owns
+    # exactly one jit trace (recv masks on device, row-selects host-side).
+    row = audit_cell("CartPole-v1", "async", batch=4, run_retrace=True)
+    assert row["status"] == "ok"
+    assert row["retraces"] <= RETRACE_BUDGET["async"] == row["retrace_budget"]
+    assert row_violations(row) == []
+
+
+@pytest.mark.slow
+def test_audit_smoke_report_schema():
+    from repro.analysis.audit import run
+    report = run(ids=["CartPole-v1"], backends=("vmap", "async"), smoke=True)
+    assert report["ok"], report["violations"]
+    assert report["summary"]["cells"] == 2
+    assert {r["backend"] for r in report["rows"]} == {"vmap", "async"}
+    json.dumps(report)  # machine-readable end to end
