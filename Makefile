@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-async test-conformance test-fault api-check lint analyze bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-async test-conformance test-fault test-train api-check lint analyze bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,6 +48,17 @@ test-fault:
 	$(PY) -m pytest -x -q tests/test_checkpoint.py tests/test_failures.py \
 		tests/test_supervisor.py
 
+# Fused on-device training + fleets: the training-parity harness
+# (tests/test_train_fused.py — committed 64-step goldens, fused ≡
+# host-alternating bit-parity, chunk-size invariance, fleet-vs-solo
+# determinism) plus the hypothesis drivers when hypothesis is installed.
+# The fast parity subset also rides in `make test-fast`; the fleet /
+# interleaving sweeps are marked `slow`. Regenerate the training goldens
+# (host-alternating path only) with
+#   $(PY) -m pytest tests/test_train_fused.py --regen-golden
+test-train:
+	$(PY) -m pytest -x -q tests/test_train_fused.py tests/test_train_property.py
+
 # Registry-driven conformance: every registered env id × every backend
 # (python baseline / vmap / fused / pool) + the committed golden traces.
 # After an intentional dynamics change, regenerate the goldens with
@@ -61,12 +72,15 @@ test-conformance:
 bench-smoke: bench-json
 
 # Machine-readable perf record: fig1 (steps/s per backend, vmap vs fused
-# pallas megastep), fig4 (batch/device scaling), fig_async (continuous
-# slot refill vs lock-step wave serving), fig_fault (checkpointing tax,
-# snapshot amortization, device-loss recovery time) and the HLO audit
-# (per-id residency/donation/flops rows), all in smoke mode.
+# pallas megastep), fig2 (DQN training wall-clock: gym vs compiled vs
+# fused one-program training, plus fleet-scaling sublinearity rows),
+# fig4 (batch/device scaling), fig_async (continuous slot refill vs
+# lock-step wave serving), fig_fault (checkpointing tax, snapshot
+# amortization, device-loss recovery time) and the HLO audit (per-id
+# residency/donation/flops rows + the fused-train cells), all in smoke mode.
 bench-json:
 	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
+	$(PY) benchmarks/fig2_dqn_training.py --smoke --json BENCH_fig2.json
 	$(PY) benchmarks/fig4_pool_scaling.py --steps 300 --batches 1,64,1024 \
 		--json BENCH_fig4.json
 	$(PY) benchmarks/fig_async.py --smoke --json BENCH_fig_async.json

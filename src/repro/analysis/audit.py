@@ -27,6 +27,15 @@ a row (`status: "refused"`), so the report still covers the full registry
 (the same hosted-or-named-refusal contract the conformance matrix uses).
 Unexpected refusal classes are violations.
 
+Beyond the per-step pool matrix, full sweeps also audit the *fused train*
+programs (`backend: "train_fused"`): for each committed training-golden id
+(repro.train.fused.GOLDEN_TRAIN_IDS) the donated K-step train chunk —
+rollout, replay ring, learner and target sync in ONE program — is lowered
+via `lower_train_chunk` and held to the same residency + full-carry-
+donation gates, replay ring and optimizer state included. This certifies
+the tentpole claim machine-checkably: nothing crosses the host boundary
+inside a fused training chunk, and the whole carry updates in place.
+
 The JSON report (`BENCH_hlo_audit.json`) is machine-readable: one row per
 (id, backend) with residency/donation/flops/bytes, a `violations` list,
 and `ok`. Exit status is nonzero iff any violation is unallowlisted.
@@ -49,6 +58,10 @@ from repro.launch.hlo_analysis import (analyze_hlo, donated_params,
 
 #: pool flavors audited per id (the four step-dispatch paths of the stack)
 BACKENDS = ("vmap", "pallas", "async", "sharded")
+
+#: backend tag of the fused-train audit rows (not a pool flavor: the cell
+#: ids are "<algo>/<env_id>" training-golden ids, not registry env ids)
+TRAIN_BACKEND = "train_fused"
 
 #: refusal classes that are legitimate "this backend cannot host this id"
 #: answers rather than bugs (mirrors the conformance matrix contract)
@@ -116,18 +129,9 @@ def _run_async_retrace(env_id: str, slots: int) -> int:
     return trace_count(pool._jit_step) or 0
 
 
-def audit_cell(env_id: str, backend: str, batch: int,
-               run_retrace: bool = False) -> Dict[str, Any]:
-    """Audit one (id, backend) cell; returns its report row."""
-    row: Dict[str, Any] = {"id": env_id, "backend": backend, "batch": batch}
-    try:
-        pool = _build_pool(env_id, backend, batch)
-        lowered, carry = _lower_step(pool, backend)
-    except Exception as e:  # repro: allow[silent-except] named-refusal protocol: class+message recorded in the row, judged against EXPECTED_REFUSALS
-        row.update(status="refused", refusal=type(e).__name__,
-                   refusal_msg=str(e).splitlines()[0][:200])
-        return row
-
+def _gate_lowered(row: Dict[str, Any], lowered, carry) -> Dict[str, Any]:
+    """Shared residency/donation gate body: fill `row` from a lowered
+    donated program whose argument 0 is `carry`."""
     carry_leaves = len(jax.tree.leaves(carry))
     donated = donated_params(lowered.as_text())
     hlo = lowered.compile().as_text()
@@ -143,10 +147,49 @@ def audit_cell(env_id: str, backend: str, batch: int,
         flops=analysis.flops,
         bytes=analysis.bytes,
     )
+    return row
+
+
+def audit_cell(env_id: str, backend: str, batch: int,
+               run_retrace: bool = False) -> Dict[str, Any]:
+    """Audit one (id, backend) cell; returns its report row."""
+    row: Dict[str, Any] = {"id": env_id, "backend": backend, "batch": batch}
+    try:
+        pool = _build_pool(env_id, backend, batch)
+        lowered, carry = _lower_step(pool, backend)
+    except Exception as e:  # repro: allow[silent-except] named-refusal protocol: class+message recorded in the row, judged against EXPECTED_REFUSALS
+        row.update(status="refused", refusal=type(e).__name__,
+                   refusal_msg=str(e).splitlines()[0][:200])
+        return row
+    row = _gate_lowered(row, lowered, carry)
     if run_retrace and backend in RETRACE_BUDGET:
         row["retraces"] = _run_async_retrace(env_id, batch)
         row["retrace_budget"] = RETRACE_BUDGET[backend]
     return row
+
+
+def audit_train_cell(gid: str, chunk: int = 8) -> Dict[str, Any]:
+    """Audit one fused-train program (a GOLDEN_TRAIN_IDS "<algo>/<env>" id).
+
+    Lowers the exact donated chunk `repro.train.fused.run_fused`
+    dispatches — K train steps scanned into one program — and gates it
+    like a pool cell: zero host-transfer ops, and EVERY carry leaf
+    (network params, optimizer moments, the replay ring, pool state, key
+    chain) donated.
+    """
+    from repro.train.fused import golden_train_setup, lower_train_chunk
+
+    row: Dict[str, Any] = {"id": gid, "backend": TRAIN_BACKEND,
+                           "chunk": chunk}
+    try:
+        algo, env_id, cfg, _ = golden_train_setup(gid)
+        row["batch"] = cfg.num_envs
+        lowered, carry = lower_train_chunk(algo, env_id, cfg, chunk=chunk)
+    except Exception as e:  # repro: allow[silent-except] named-refusal protocol (see audit_cell)
+        row.update(status="refused", refusal=type(e).__name__,
+                   refusal_msg=str(e).splitlines()[0][:200])
+        return row
+    return _gate_lowered(row, lowered, carry)
 
 
 def row_violations(row: Dict[str, Any]) -> List[str]:
@@ -182,9 +225,17 @@ def plan(ids: Optional[Sequence[str]] = None,
 
 def run(ids: Optional[Sequence[str]] = None,
         backends: Sequence[str] = BACKENDS, batch: int = 4,
-        smoke: bool = True, progress=None) -> Dict[str, Any]:
-    """Run the sweep; returns the report dict (see module docstring)."""
+        smoke: bool = True, train: Optional[bool] = None,
+        progress=None) -> Dict[str, Any]:
+    """Run the sweep; returns the report dict (see module docstring).
+
+    `train` adds the fused-train cells (one per GOLDEN_TRAIN_IDS id) after
+    the pool matrix; None means auto — on for full-registry sweeps, off
+    when an explicit `ids` subset is being audited (the subset names env
+    ids, not "<algo>/<env>" training ids).
+    """
     cells = plan(ids, backends)
+    train = (ids is None) if train is None else train
     retrace_ids = (set(RETRACE_SMOKE_IDS) if smoke
                    else {i for i in {c[0] for c in cells}
                          if supports_fused_step(make(i))})
@@ -197,6 +248,17 @@ def run(ids: Optional[Sequence[str]] = None,
         violations.extend(row_violations(row))
         if progress:
             progress(row)
+    train_ids: Tuple[str, ...] = ()
+    if train:
+        from repro.train.fused import GOLDEN_TRAIN_IDS
+
+        train_ids = GOLDEN_TRAIN_IDS
+        for gid in train_ids:
+            row = audit_train_cell(gid)
+            rows.append(row)
+            violations.extend(row_violations(row))
+            if progress:
+                progress(row)
     hosted = [r for r in rows if r["status"] == "ok"]
     report = {
         "meta": {
@@ -206,6 +268,7 @@ def run(ids: Optional[Sequence[str]] = None,
             "platform": jax.default_backend(),
             "backends": list(backends),
             "ids": sorted({c[0] for c in cells}),
+            "train_cells": list(train_ids),
             "retrace_budget": dict(RETRACE_BUDGET),
         },
         "rows": rows,
@@ -236,6 +299,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help=f"comma-separated backend subset of {BACKENDS}")
     ap.add_argument("--batch", type=int, default=0,
                     help="envs/slots per pool (default: 4 smoke, 16 full)")
+    ap.add_argument("--train", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="audit the fused-train programs too (default: auto "
+                         "— on for full-registry sweeps, off with --ids)")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the report as JSON")
     args = ap.parse_args(argv)
@@ -259,7 +326,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               flush=True)
 
     report = run(ids=ids, backends=backends, batch=batch, smoke=args.smoke,
-                 progress=progress)
+                 train=args.train, progress=progress)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)

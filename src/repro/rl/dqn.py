@@ -121,10 +121,17 @@ def _td_loss(apply_fn, params, target, batch, discount):
 
 
 def make_learn_step(apply_fn, cfg: DQNConfig):
-    """The jitted learner update shared by both execution modes."""
-    optimizer = Adam(lr=cfg.lr)
+    """The jitted learner update shared by both execution modes.
 
-    def learn(params, target, opt, batch):
+    `lr` (optional; traced values welcome) overrides cfg.lr at call time —
+    the fleet trainer (repro.train.fused) vmaps one training loop over a
+    whole learning-rate axis through this hook. float32(cfg.lr) and the
+    python-float default produce bit-identical updates, so threading it
+    does not perturb the solo path.
+    """
+
+    def learn(params, target, opt, batch, lr=None):
+        optimizer = Adam(lr=cfg.lr if lr is None else lr)
         loss, grads = jax.value_and_grad(
             lambda p: _td_loss(apply_fn, p, target, batch, cfg.discount)
         )(params)
@@ -135,11 +142,16 @@ def make_learn_step(apply_fn, cfg: DQNConfig):
 
 
 def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
-    """One environment-interaction + learn step; scanned by train_compiled."""
+    """One environment-interaction + learn step; scanned by train_compiled.
+
+    The optional `lr` kwarg flows through to the learner (see
+    make_learn_step) so `repro.train.fused.fleet` can thread a per-row
+    learning rate through the otherwise-identical scan body.
+    """
     pool = _make_pool(env, cfg)
     learn = make_learn_step(apply_fn, cfg)
 
-    def step_fn(state: DQNState, _):
+    def step_fn(state: DQNState, _, lr=None):
         key, k_eps, k_act, k_env, k_sample = jax.random.split(state.key, 5)
         eps = _epsilon(cfg, state.step)
         obs = state.pool.obs
@@ -161,7 +173,8 @@ def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
         # learn (skipped while the buffer warms up)
         batch = replay_sample(replay, k_sample, cfg.batch_size)
         can_learn = replay.size >= cfg.learn_start
-        new_params, new_opt, loss = learn(state.params, state.target, state.opt, batch)
+        new_params, new_opt, loss = learn(state.params, state.target,
+                                          state.opt, batch, lr=lr)
         params = jax.tree.map(lambda n, o: jnp.where(can_learn, n, o), new_params, state.params)
         opt = jax.tree.map(lambda n, o: jnp.where(can_learn, n, o), new_opt, state.opt)
 
@@ -182,10 +195,26 @@ def make_train_step(env: Env, apply_fn, cfg: DQNConfig):
 
 
 def train_compiled(env: Env, cfg: DQNConfig, steps: int, key: jax.Array,
-                   chunk: int = 0):
-    """Full DQN training as compiled scan(s). Returns (state, metrics dict of (T,))."""
+                   chunk: int = 0, fused: bool = False):
+    """Full DQN training as compiled scan(s).
+
+    Returns (state, apply_fn, metrics dict of (T,)).
+
+    fused=True dispatches the SAME scan body through
+    `repro.train.fused.run_fused`: one donated jit per chunk, so the carry
+    (replay ring, optimizer state, pool state, key chain) is updated in
+    place on device instead of being re-materialized per dispatch.
+    Trajectories are bit-identical to fused=False — the RNG chain lives in
+    the carry either way, so neither `fused` nor `chunk` can shift it
+    (tests/test_train_fused.py pins both against committed goldens).
+    """
     state, apply_fn = dqn_init(env, cfg, key)
     step_fn = make_train_step(env, apply_fn, cfg)
+    if fused:
+        from repro.train.fused import run_fused
+
+        state, metrics = run_fused(step_fn, state, steps, chunk)
+        return state, apply_fn, metrics
     chunk = min(chunk or steps, steps)
 
     @functools.partial(jax.jit, static_argnums=(1,))

@@ -1,4 +1,11 @@
-"""Pure-JAX policy/value networks (init/apply pairs, pytree params)."""
+"""Pure-JAX policy/value networks (init/apply pairs, pytree params).
+
+Both init and apply must stay pure and shape-static: the fleet trainer
+(repro.train.fused.fleet) vmaps the ENTIRE training loop — `*_init`
+included, over a traced-key axis — so a fleet of F experiments owns one
+(F, ...)-batched params pytree. Anything host-dependent here (python
+randomness, data-dependent shapes) would break that batching.
+"""
 from __future__ import annotations
 
 from typing import Sequence, Tuple

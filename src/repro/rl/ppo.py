@@ -82,8 +82,12 @@ def ppo_init(env: Env, cfg: PPOConfig, key: jax.Array) -> PPOState:
     params = ac_init(knet, obs_dim, env.action_space.n, cfg)
     pool = _make_pool(env, cfg)
     opt = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm).init(params)
-    zeros = jnp.zeros((cfg.num_envs,), jnp.float32)
-    return PPOState(params, opt, pool.init(kenv), key, zeros, zeros)
+    # ep_return/last_return must be distinct buffers: the fused trainer
+    # donates the whole carry, and donating one buffer into two slots is a
+    # runtime error (repro.train.fused also dedupes defensively).
+    return PPOState(params, opt, pool.init(kenv), key,
+                    jnp.zeros((cfg.num_envs,), jnp.float32),
+                    jnp.zeros((cfg.num_envs,), jnp.float32))
 
 
 def _gae(rewards, values, dones, last_value, discount, lam):
@@ -101,9 +105,17 @@ def _gae(rewards, values, dones, last_value, discount, lam):
     return advs
 
 
-def make_update(env: Env, cfg: PPOConfig):
+def make_update_body(env: Env, cfg: PPOConfig):
+    """The pure (un-jitted) PPO update: collect rollout_len steps through
+    the pool + K epochs of clipped-surrogate minibatches, as one
+    carry → carry function.
+
+    `make_update` wraps it in jit (the host-alternating loop);
+    `repro.train.fused` scans it — U updates inside one donated jit — and
+    threads the optional `lr` (traced ok) through the optimizer for fleet
+    sweeps. lr=None keeps cfg.lr bit-exactly.
+    """
     pool = _make_pool(env, cfg)
-    optimizer = Adam(lr=cfg.lr, clip_norm=cfg.max_grad_norm)
 
     def collect(state: PPOState):
         def step_fn(carry, _):
@@ -153,8 +165,9 @@ def make_update(env: Env, cfg: PPOConfig):
         ent = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-10), axis=-1))
         return pg + cfg.vf_coef * vf - cfg.ent_coef * ent
 
-    @jax.jit
-    def update(state: PPOState):
+    def update_body(state: PPOState, lr=None):
+        optimizer = Adam(lr=cfg.lr if lr is None else lr,
+                         clip_norm=cfg.max_grad_norm)
         (ps, key, ep_ret, last_ret), traj = collect(state)
         t_obs, t_act, t_logp, t_val, t_rew, t_done = traj
         _, last_value = ac_apply(state.params, ps.obs, cfg.activation)
@@ -189,11 +202,30 @@ def make_update(env: Env, cfg: PPOConfig):
         new_state = PPOState(params, opt, ps, key, ep_ret, last_ret)
         return new_state, {"loss": losses.mean(), "return": last_ret.mean()}
 
-    return update
+    return update_body
 
 
-def train(env: Env, cfg: PPOConfig, updates: int, key: jax.Array):
+def make_update(env: Env, cfg: PPOConfig):
+    return jax.jit(make_update_body(env, cfg))
+
+
+def train(env: Env, cfg: PPOConfig, updates: int, key: jax.Array,
+          fused: bool = False, chunk: int = 0):
+    """PPO training. Returns (state, metrics dict of (updates,)).
+
+    fused=True scans the update body through `repro.train.fused.run_fused`
+    — U updates inside one donated jit per chunk instead of U host
+    dispatches; the key chain rides the carry, so the trajectory matches
+    the host-alternating loop (float rounding only: one program gives XLA
+    different fusion freedom than U identical ones —
+    tests/test_train_fused.py bounds it by the standard parity contract).
+    """
     state = ppo_init(env, cfg, key)
+    if fused:
+        from repro.train.fused import run_fused
+
+        body = make_update_body(env, cfg)
+        return run_fused(lambda s, _: body(s), state, updates, chunk)
     update = make_update(env, cfg)
     history = []
     for _ in range(updates):

@@ -3,6 +3,14 @@
 The paper's DQN uses a 50 000-transition memory (Table I). Keeping it on
 device means the sample→learn path never leaves the accelerator — the same
 "stay in one memory space" principle as the renderer (§II-B).
+
+Contract the fused trainer leans on (repro.train.fused): the ring is a
+pure function of the transition STREAM, not of how the stream is chunked
+into `replay_add_batch` calls — any regrouping of the same transitions
+yields an identical ReplayState, so chunk boundaries in the donated train
+scan can never lose or duplicate a transition. Pinned as a property in
+tests/test_train_fused.py (`check_replay_chunking`) with hypothesis
+drivers in tests/test_train_property.py.
 """
 from __future__ import annotations
 

@@ -1,1 +1,23 @@
-"""train subsystem."""
+"""train subsystem.
+
+`repro.train.fleet` / `repro.train.fused` is the fused on-device trainer:
+K train steps scanned inside one donated jit, and whole seeds×lr fleets
+vmapped into a single compiled batch. Exports resolve lazily (PEP 562) so
+`import repro.train` stays cheap (same policy as the `repro` root).
+"""
+
+#: public surface (tests/test_api_surface.py)
+__all__ = ["Fleet", "GOLDEN_TRAIN_IDS", "fleet", "fleet_grid",
+           "fused_train_chunk", "golden_train_setup", "lower_train_chunk",
+           "run_fused"]
+
+_LAZY = {name: ("repro.train.fused", name) for name in __all__}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

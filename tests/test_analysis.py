@@ -25,7 +25,8 @@ import pytest
 
 from repro.analysis import RULES, RetraceError, RetraceGuard, lint_paths, lint_source
 from repro.analysis.audit import (BACKENDS, EXPECTED_REFUSALS, RETRACE_BUDGET,
-                                  audit_cell, plan, row_violations)
+                                  TRAIN_BACKEND, audit_cell, audit_train_cell,
+                                  plan, row_violations)
 from repro.analysis.retrace import trace_count
 from repro.analysis.rules import pragma_lines
 from repro.core.registry import registered
@@ -220,4 +221,43 @@ def test_audit_smoke_report_schema():
     assert report["ok"], report["violations"]
     assert report["summary"]["cells"] == 2
     assert {r["backend"] for r in report["rows"]} == {"vmap", "async"}
+    assert report["meta"]["train_cells"] == []  # auto-off for id subsets
     json.dumps(report)  # machine-readable end to end
+
+
+# -- fused-train cells ---------------------------------------------------------
+
+def test_audit_train_cell_certifies_fused_dqn():
+    """The tentpole's machine-checkable claim: the donated fused-train
+    chunk — rollout + replay ring + learner + target sync in one program —
+    has zero host-transfer ops and donates EVERY carry leaf (replay ring
+    and optimizer moments included)."""
+    row = audit_train_cell("dqn/CartPole-v1")
+    assert row["status"] == "ok"
+    assert row["backend"] == TRAIN_BACKEND
+    assert row["host_transfer_ops"] == []
+    assert row["donation"] == 1.0
+    # the carry is the full DQNState: params+target+opt+replay+pool+key+...
+    assert row["carry_params"] == row["donated_params"] > 20
+    assert row_violations(row) == []
+
+
+def test_audit_train_cell_unknown_id_refuses_by_name():
+    row = audit_train_cell("dqn/NoSuchEnv-v9")
+    assert row["status"] == "refused"
+    assert row["refusal"] == "KeyError"
+
+
+@pytest.mark.slow
+def test_audit_run_with_train_appends_golden_train_rows():
+    from repro.analysis.audit import run
+    from repro.train.fused import GOLDEN_TRAIN_IDS
+    report = run(ids=["CartPole-v1"], backends=("vmap",), smoke=True,
+                 train=True)
+    assert report["ok"], report["violations"]
+    assert report["meta"]["train_cells"] == list(GOLDEN_TRAIN_IDS)
+    train_rows = [r for r in report["rows"] if r["backend"] == TRAIN_BACKEND]
+    assert [r["id"] for r in train_rows] == list(GOLDEN_TRAIN_IDS)
+    for r in train_rows:
+        assert r["host_transfer_ops"] == [] and r["donation"] == 1.0
+    json.dumps(report)

@@ -39,6 +39,11 @@ API_SURFACE = {
         "fused_transition", "lookup", "megastep_pallas", "megastep_ref",
         "spec_for", "supports",
     ],
+    "repro.train": [
+        "Fleet", "GOLDEN_TRAIN_IDS", "fleet", "fleet_grid",
+        "fused_train_chunk", "golden_train_setup", "lower_train_chunk",
+        "run_fused",
+    ],
 }
 
 

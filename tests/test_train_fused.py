@@ -1,0 +1,356 @@
+"""Training-parity harness for the fused on-device trainer (repro.train.fused).
+
+The contract under test, per golden id (dqn/CartPole-v1, dqn/FrozenLake-v0,
+ppo/CartPole-v1):
+
+  goldens    : a 64-env-step seeded training run reduced to checksums
+               (params, replay cursor + ring content, final key chain, eval
+               return) and committed under tests/golden/train_<algo>_<env>.json.
+               The HOST-ALTERNATING path owns the files (`--regen-golden`
+               rewrites them); every fused/fleet execution mode answers to
+               the same committed numbers — no parallel trace set to drift.
+  bit-parity : fused=True (one donated jit per chunk) reproduces fused=False
+               (undonated per-chunk dispatch) bit for bit — DQN asserted
+               exactly; PPO through the standard parity contract
+               (`assert_leaves_match`: ints/keys exact, floats 1e-5).
+  chunk seam : the RNG chain lives in the donated carry, so neither `chunk`
+               nor `fused` can shift the trajectory (the regression the
+               fused path's design pins — a fold_in(key, step)-per-chunk
+               scheme would fail here).
+  fleets     : `fleet()` rows are bit-identical (DQN) / parity-contract
+               equal (PPO, float rounding under vmap) to the solo run with
+               that row's (seed, lr).
+"""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_leaves_match
+from repro.core import make
+from repro.rl import dqn, ppo
+from repro.train import fused as F
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+EVAL_KEY = jax.random.PRNGKey(123)
+
+
+def _golden_path(gid: str) -> pathlib.Path:
+    return GOLDEN_DIR / f"train_{gid.replace('/', '_')}.json"
+
+
+def _train(gid: str, fused: bool = False, chunk: int = 0):
+    """One golden-config training run -> (cfg, final state, eval apply_fn)."""
+    algo, env_id, cfg, steps = F.golden_train_setup(gid)
+    env = make(env_id)
+    key = jax.random.PRNGKey(sum(map(ord, gid)))
+    if algo == "dqn":
+        state, apply_fn, _ = dqn.train_compiled(env, cfg, steps, key,
+                                                chunk=chunk, fused=fused)
+        return env, cfg, state, apply_fn
+    state, _ = ppo.train(env, cfg, steps, key, fused=fused, chunk=chunk)
+    apply_fn = lambda p, o: ppo.ac_apply(p, o, cfg.activation)[0]
+    return env, cfg, state, apply_fn
+
+
+def _checksums(gid: str, env, state, apply_fn) -> dict:
+    """Reduce a final training state to the committed golden fields."""
+    f64sum = lambda x: float(np.asarray(jax.device_get(x), np.float64).sum())
+    params = state.params
+    got = {
+        "id": gid,
+        "param_sum": sum(f64sum(l) for l in jax.tree.leaves(params)),
+        "param_abs_sum": sum(float(np.abs(np.asarray(l, np.float64)).sum())
+                             for l in jax.tree.leaves(params)),
+        "final_key": np.asarray(state.key).tolist(),
+        "last_return_mean": f64sum(state.last_return) / state.last_return.size,
+        "eval_return_mean": float(np.mean(np.asarray(dqn.greedy_returns(
+            env, apply_fn, params, EVAL_KEY, episodes=4, max_steps=100)))),
+    }
+    if hasattr(state, "replay"):
+        r = state.replay
+        got.update(replay_ptr=int(r.ptr), replay_size=int(r.size),
+                   replay_obs_sum=f64sum(r.obs),
+                   replay_reward_sum=f64sum(r.reward),
+                   replay_done_sum=f64sum(r.done))
+    return got
+
+
+def _assert_states_equal_exactly(a, b, what: str):
+    """Bit-parity: every leaf identical, floats included."""
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape, what
+        np.testing.assert_array_equal(x, y, err_msg=what)
+
+
+# -- golden training traces ---------------------------------------------------
+
+@pytest.mark.parametrize("gid", F.GOLDEN_TRAIN_IDS)
+def test_train_golden_trace(gid, regen_golden):
+    """The host-alternating path answers to (and owns) the committed trace."""
+    env, cfg, state, apply_fn = _train(gid, fused=False)
+    got = _checksums(gid, env, state, apply_fn)
+    path = _golden_path(gid)
+    if regen_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        return
+    assert path.exists(), (
+        f"no committed training golden for {gid!r} — run `python -m pytest "
+        "tests/test_train_fused.py --regen-golden` and review the JSON diff")
+    want = json.loads(path.read_text())
+    assert got["final_key"] == want["final_key"], (
+        f"{gid}: the threefry key chain drifted — some RNG consumer moved")
+    for k in ("replay_ptr", "replay_size"):
+        if k in want:
+            assert got[k] == want[k], f"{gid}: replay cursor drifted ({k})"
+    for k, v in want.items():
+        if isinstance(v, float):
+            np.testing.assert_allclose(
+                got[k], v, rtol=1e-4, atol=1e-4,
+                err_msg=f"{gid}.{k}: training dynamics drifted from the "
+                        "committed golden (tests/golden/) — if intentional, "
+                        "rerun with --regen-golden and review the diff")
+
+
+@pytest.mark.parametrize("gid", F.GOLDEN_TRAIN_IDS)
+def test_fused_answers_to_the_same_golden(gid, regen_golden):
+    """The fused trainer is judged against the SAME committed file (it never
+    regenerates — the host-alternating path owns the goldens)."""
+    if regen_golden:
+        pytest.skip("goldens are regenerated by the host-alternating path only")
+    env, cfg, state, apply_fn = _train(gid, fused=True, chunk=13)
+    got = _checksums(gid, env, state, apply_fn)
+    want = json.loads(_golden_path(gid).read_text())
+    assert got["final_key"] == want["final_key"], gid
+    for k, v in want.items():
+        if isinstance(v, float):
+            np.testing.assert_allclose(got[k], v, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{gid}.{k} (fused)")
+
+
+# -- fused ≡ host-alternating bit-parity --------------------------------------
+
+@pytest.mark.parametrize("gid", [g for g in F.GOLDEN_TRAIN_IDS
+                                 if g.startswith("dqn/")])
+def test_fused_matches_host_alternating_bitwise_dqn(gid):
+    _, _, host, _ = _train(gid, fused=False, chunk=16)
+    _, _, fused, _ = _train(gid, fused=True)
+    _assert_states_equal_exactly(host._asdict(), fused._asdict(),
+                                 f"{gid}: fused vs host-alternating")
+
+
+def test_fused_matches_host_alternating_ppo():
+    """PPO: one scanned program vs U jitted dispatches gives XLA different
+    fusion freedom, so parity is the standard contract (ints/keys exact,
+    floats 1e-5) rather than a bit-equality claim."""
+    _, _, host, _ = _train("ppo/CartPole-v1", fused=False)
+    _, _, fused, _ = _train("ppo/CartPole-v1", fused=True)
+    assert_leaves_match(host._asdict(), fused._asdict(),
+                        "ppo fused vs host-alternating")
+
+
+# -- the chunk seam: chunk size must not change the trajectory ----------------
+
+def test_chunk_size_does_not_change_trajectory():
+    """Regression for the fused path's key-chain pinning: the RNG chain
+    rides the donated carry, so any (fused, chunk) combination replays the
+    identical threefry chain — a per-chunk host-side fold_in would fail
+    this bitwise."""
+    gid = "dqn/CartPole-v1"
+    _, _, ref, _ = _train(gid, fused=False, chunk=0)       # one program
+    for fused, chunk in ((False, 9), (True, 64), (True, 7), (True, 1)):
+        _, _, got, _ = _train(gid, fused=fused, chunk=chunk)
+        _assert_states_equal_exactly(
+            ref._asdict(), got._asdict(),
+            f"{gid}: fused={fused} chunk={chunk} shifted the trajectory")
+
+
+def test_ppo_chunk_size_does_not_change_trajectory():
+    _, _, a, _ = _train("ppo/CartPole-v1", fused=True, chunk=0)
+    _, _, b, _ = _train("ppo/CartPole-v1", fused=True, chunk=3)
+    _assert_states_equal_exactly(a._asdict(), b._asdict(),
+                                 "ppo fused chunk=0 vs chunk=3")
+
+
+# -- megastep rollout inside the fused train program --------------------------
+
+@pytest.mark.slow
+def test_fused_trainer_through_megastep_backend():
+    """env_backend='jnp' routes every env transition inside the fused train
+    scan through the megastep kernel path (kernels/envstep row dynamics) —
+    the learner and the fused rollout share one compiled program, and the
+    trajectory still matches the vmap backend."""
+    algo, env_id, cfg, steps = F.golden_train_setup("dqn/CartPole-v1")
+    env = make(env_id)
+    key = jax.random.PRNGKey(3)
+    sv, _, _ = dqn.train_compiled(env, cfg, steps, key, fused=True)
+    cfg_j = dataclasses.replace(cfg, env_backend="jnp")
+    sj, _, _ = dqn.train_compiled(env, cfg_j, steps, key, fused=True)
+    assert_leaves_match(sv._asdict(), sj._asdict(),
+                        "fused trainer: megastep(jnp) vs vmap env backend")
+
+
+# -- fleets -------------------------------------------------------------------
+
+def test_fleet_rows_match_solo():
+    """Fleet determinism (DQN): each vmapped row is bit-identical to the
+    solo run with that row's (seed, lr)."""
+    algo, env_id, cfg, _ = F.golden_train_setup("dqn/CartPole-v1")
+    env = make(env_id)
+    grid = F.Fleet(jnp.asarray([5, 9], jnp.int32),
+                   jnp.asarray([3e-4, 1e-3], jnp.float32))
+    states, metrics = F.fleet(env, grid, 32, algo="dqn", cfg=cfg)
+    assert jax.tree.leaves(metrics)[0].shape[:2] == (2, 32)
+    for f in range(grid.width):
+        solo_cfg = dataclasses.replace(cfg, lr=float(grid.lr[f]))
+        solo, _, _ = dqn.train_compiled(env, solo_cfg, 32,
+                                        jax.random.PRNGKey(int(grid.seed[f])))
+        row = jax.tree.map(lambda x: x[f], states)
+        _assert_states_equal_exactly(solo._asdict(), row._asdict(),
+                                     f"fleet row {f} vs solo")
+
+
+@pytest.mark.slow
+def test_fleet_ppo_row_matches_solo():
+    """PPO fleet rows: parity contract (vmap batching reassociates floats;
+    ints and the key chain stay exact)."""
+    algo, env_id, cfg, _ = F.golden_train_setup("ppo/CartPole-v1")
+    env = make(env_id)
+    states, _ = F.fleet(env, {"seeds": [7]}, 2, algo="ppo", cfg=cfg)
+    solo, _ = ppo.train(env, cfg, 2, jax.random.PRNGKey(7))
+    assert_leaves_match(solo._asdict(),
+                        jax.tree.map(lambda x: x[0], states)._asdict(),
+                        "ppo fleet row vs solo")
+
+
+def test_fleet_grid_and_specs():
+    g = F.fleet_grid([0, 1], [1e-3, 3e-4])
+    assert g.width == 4
+    assert np.asarray(g.seed).tolist() == [0, 0, 1, 1]
+    np.testing.assert_allclose(np.asarray(g.lr), [1e-3, 3e-4, 1e-3, 3e-4])
+    with pytest.raises(TypeError, match="unknown fleet grid"):
+        F._as_fleet({"seeds": [0], "learning_rates": [1e-3]}, 3e-4)
+    fl = F._as_fleet([3, 4, 5], 2e-4)
+    assert fl.width == 3
+    np.testing.assert_allclose(np.asarray(fl.lr), [2e-4] * 3)
+    with pytest.raises(ValueError, match="unknown fleet algo"):
+        F.fleet("CartPole-v1", [0], 1, algo="a2c")
+
+
+# -- property checks ----------------------------------------------------------
+# Core checkers shared by two drivers: the seeded-fuzz tests below (always
+# run) and the hypothesis `@given` drivers in tests/test_train_property.py
+# (skipped when hypothesis is absent — it is an optional dep).
+
+def check_replay_chunking(cap, batches, regroup):
+    """The ring is a pure function of the transition STREAM, not of how the
+    stream is chunked into add calls: any regrouping of the same
+    transitions produces an identical ReplayState (no transition lost or
+    duplicated at a chunk boundary), and the final ring equals the
+    per-transition oracle (later writes win, ptr advances by the full
+    stream length)."""
+    from repro.rl.replay import replay_add_batch, replay_init
+
+    tags = np.arange(sum(batches), dtype=np.float32)
+    assert sum(regroup) == len(tags)
+
+    def add_stream(groups):
+        state, i = replay_init(cap, (1,)), 0
+        for g in groups:
+            chunk = tags[i:i + g]
+            state = replay_add_batch(
+                state, jnp.asarray(chunk)[:, None],
+                jnp.asarray(chunk, jnp.int32), jnp.asarray(chunk),
+                jnp.asarray(chunk)[:, None], jnp.zeros_like(chunk))
+            i += g
+        return state
+
+    a = add_stream(batches)
+    # regroup the same stream: fully flat (one transition per call) and the
+    # caller's alternative grouping
+    for groups, what in (([1] * len(tags), "flat"), (regroup, "regroup")):
+        other = add_stream(groups)
+        for x, y in zip(jax.tree.leaves(a._asdict()),
+                        jax.tree.leaves(other._asdict())):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"chunking changed the ring ({what}={groups})")
+    # per-transition oracle: slot j holds the LAST tag t with write index
+    # ≡ j (mod cap); ptr advanced by the full stream length
+    T = len(tags)
+    assert int(a.ptr) == T % cap
+    assert int(a.size) == min(T, cap)
+    slots = np.full((cap,), np.nan)
+    for t in range(T):
+        slots[t % cap] = tags[t]
+    written = ~np.isnan(slots)
+    np.testing.assert_array_equal(np.asarray(a.obs)[written, 0],
+                                  slots[written], err_msg="oracle ring")
+
+
+def check_fused_interleaving(chunk, cap, batch, width, seed, steps=12):
+    """Random (chunk, replay capacity, learn batch, fleet width)
+    interleavings through the REAL fused trainer: the donated chunked run
+    is bit-identical to the monolithic host-alternating program (replay
+    ring included — nothing lost or duplicated at chunk boundaries), the
+    cursor lands where the stream length says it must, and every fleet row
+    reproduces its solo run."""
+    env = make("CartPole-v1")
+    cfg = dqn.DQNConfig(num_envs=2, memory_size=cap, learn_start=8,
+                        batch_size=batch, exploration_steps=10,
+                        target_update_freq=5)
+    key = jax.random.PRNGKey(seed)
+    ref, _, _ = dqn.train_compiled(env, cfg, steps, key)
+    got, _, _ = dqn.train_compiled(env, cfg, steps, key, fused=True,
+                                   chunk=chunk)
+    _assert_states_equal_exactly(ref._asdict(), got._asdict(),
+                                 f"fused chunk={chunk} cap={cap}")
+    written = steps * cfg.num_envs
+    assert int(got.replay.ptr) == written % cap
+    assert int(got.replay.size) == min(written, cap)
+    seeds = jnp.arange(seed, seed + width, dtype=jnp.int32)
+    states, _ = F.fleet(env, F.Fleet(seeds, jnp.full((width,), cfg.lr,
+                                                     jnp.float32)),
+                        steps, algo="dqn", cfg=cfg, chunk=chunk)
+    for f in range(width):
+        solo, _, _ = dqn.train_compiled(env, cfg, steps,
+                                        jax.random.PRNGKey(int(seeds[f])))
+        _assert_states_equal_exactly(
+            solo._asdict(), jax.tree.map(lambda x: x[f], states)._asdict(),
+            f"fleet row {f} (width={width}, chunk={chunk})")
+
+
+def _random_regroup(rng, total):
+    """A random partition of `total` stream positions into contiguous groups."""
+    if total <= 1:
+        return [total] if total else []
+    n_cuts = int(rng.integers(0, total))
+    cuts = sorted(rng.choice(np.arange(1, total),
+                             size=min(n_cuts, total - 1),
+                             replace=False).tolist())
+    return [b - a for a, b in zip([0] + cuts, cuts + [total])]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_replay_ring_chunking_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    batches = rng.integers(1, 16, size=int(rng.integers(1, 7))).tolist()
+    check_replay_chunking(int(rng.integers(1, 13)), batches,
+                          _random_regroup(rng, sum(batches)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(3))
+def test_fused_interleaving_fuzz(seed):
+    rng = np.random.default_rng(100 + seed)
+    check_fused_interleaving(chunk=int(rng.integers(1, 17)),
+                             cap=int(rng.choice([24, 48, 96])),
+                             batch=int(rng.choice([4, 8])),
+                             width=int(rng.integers(1, 3)),
+                             seed=int(rng.integers(0, 2**16)))

@@ -1,0 +1,46 @@
+"""Hypothesis drivers over the fused-trainer invariants.
+
+The property bodies live in tests/test_train_fused.py
+(`check_replay_chunking`, `check_fused_interleaving`) so the same
+invariants still run — over seeded draws — when hypothesis is absent;
+these drivers widen the search when it is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: skip, don't error
+from hypothesis import given, settings, strategies as st
+
+from test_train_fused import check_fused_interleaving, check_replay_chunking
+
+
+@settings(max_examples=25, deadline=None)
+@given(cap=st.integers(1, 12),
+       batches=st.lists(st.integers(1, 15), min_size=1, max_size=6),
+       seed=st.integers(0, 2**16 - 1))
+def test_replay_ring_invariant_under_chunking(cap, batches, seed):
+    """No transition lost or duplicated at an add-call boundary, for any
+    (capacity, batch sizes, regrouping of the same stream)."""
+    rng = np.random.default_rng(seed)
+    total = sum(batches)
+    if total <= 1:
+        regroup = [total]
+    else:
+        n_cuts = int(rng.integers(0, total))
+        cuts = sorted(rng.choice(np.arange(1, total),
+                                 size=min(n_cuts, total - 1),
+                                 replace=False).tolist())
+        regroup = [b - a for a, b in zip([0] + cuts, cuts + [total])]
+    check_replay_chunking(cap, batches, regroup)
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(chunk=st.integers(1, 16), cap=st.sampled_from([24, 48, 96]),
+       batch=st.sampled_from([4, 8]), width=st.integers(1, 2),
+       seed=st.integers(0, 2**16 - 1))
+def test_fused_trainer_interleaving_property(chunk, cap, batch, width, seed):
+    """Donated chunked training ≡ monolithic program bit for bit, replay
+    cursor lands per the stream length, fleet rows reproduce solo runs —
+    for random (chunk, capacity, batch, width) interleavings."""
+    check_fused_interleaving(chunk, cap, batch, width, seed)
