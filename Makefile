@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-async test-conformance test-fault test-train api-check lint analyze bench-smoke bench-json bench docs docs-check
+.PHONY: test test-fast test-async test-conformance test-fault test-train api-check lint analyze cost-check cost-baseline bench-smoke bench-json bench docs docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,12 +19,26 @@ test-fast: api-check analyze
 lint:
 	$(PY) -m repro.analysis.lint src
 
-# Static-analysis gate: the AST lint over src/ plus the registry-driven
-# compiled-artifact audit (every env id x backend lowered and checked for
-# zero host transfers, full carry donation, and bounded jit retraces).
+# Static-analysis gate: the AST lint over src/, the compiled-cost
+# regression gate (cost-check), plus the registry-driven compiled-artifact
+# audit (every env id x backend lowered and checked for zero host
+# transfers, full carry donation, and bounded jit retraces).
 # Fails on any unallowlisted violation; see docs/analysis.md.
-analyze: lint
+analyze: lint cost-check
 	$(PY) -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json
+
+# Compiled-cost regression gate: lower the donated step for the smoke
+# matrix (vmap+pallas per id, plus the fused-train cells), extract static
+# FLOPs / HBM bytes / peak live buffers per env step, and diff against the
+# committed baseline with per-family thresholds. Zero timing noise: a PR
+# only fails this if its *compiled artifact* got more expensive.
+cost-check:
+	$(PY) -m repro.analysis.cost --smoke --check BENCH_cost_baseline.json --table
+
+# Regenerate the committed cost baseline after an *intentional* cost
+# change; the diff is the review artifact.
+cost-baseline:
+	$(PY) -m repro.analysis.cost --smoke --regen-baseline BENCH_cost_baseline.json
 
 # CI gate: the public exports of repro / repro.core / repro.pool / cairl
 # match the checked-in snapshot (tests/test_api_surface.py) — refactors
@@ -76,8 +90,11 @@ bench-smoke: bench-json
 # fused one-program training, plus fleet-scaling sublinearity rows),
 # fig4 (batch/device scaling), fig_async (continuous slot refill vs
 # lock-step wave serving), fig_fault (checkpointing tax, snapshot
-# amortization, device-loss recovery time) and the HLO audit (per-id
-# residency/donation/flops rows + the fused-train cells), all in smoke mode.
+# amortization, device-loss recovery time), the HLO audit (per-id
+# residency/donation/flops rows + the fused-train cells), the static cost
+# report (as BENCH_cost_baseline-candidate.json, so regenerating the
+# committed baseline is a reviewed diff) and table2 (measured + static
+# joules/gCO₂ per million steps), all in smoke mode.
 bench-json:
 	$(PY) benchmarks/fig1_env_throughput.py --smoke --json BENCH_fig1.json
 	$(PY) benchmarks/fig2_dqn_training.py --smoke --json BENCH_fig2.json
@@ -86,6 +103,9 @@ bench-json:
 	$(PY) benchmarks/fig_async.py --smoke --json BENCH_fig_async.json
 	$(PY) benchmarks/fig_fault.py --smoke --json BENCH_fig_fault.json
 	$(PY) -m repro.analysis.audit --smoke --json BENCH_hlo_audit.json
+	$(PY) -m repro.analysis.cost --smoke --json BENCH_cost_baseline-candidate.json
+	$(PY) benchmarks/table2_carbon.py --smoke \
+		--static-from BENCH_cost_baseline-candidate.json --json BENCH_table2.json
 
 # Full paper-figure reproduction (CSV to stdout; slow).
 bench:

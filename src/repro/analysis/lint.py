@@ -201,6 +201,7 @@ class _Module:
         for f in self.funcs:
             self.by_name.setdefault(f.name, []).append(f)
         self.donators = self._find_donators()
+        self.transitive_donators = self._find_transitive_donators()
         self.jit_reachable = self._jit_reachable()
 
     # -- shared infrastructure -------------------------------------------
@@ -232,7 +233,76 @@ class _Module:
                       and isinstance(t.value, ast.Name)
                       and t.value.id == "self"):
                     out[("self", t.attr)] = pos
+        # decorated defs donate too: @jax.jit(donate_argnums=...) and
+        # @partial(jax.jit, donate_argnums=...); positions are rebased to
+        # *call-site* arg indices for methods (self is jit arg 0)
+        for f in self.funcs:
+            for dec in f.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                if _is_jax_jit(dec.func, self.imports):
+                    pos = _donate_positions(dec)
+                elif (self.imports.canon(_dotted(dec.func))
+                      in ("functools.partial", "partial")
+                      and dec.args and _is_jax_jit(dec.args[0], self.imports)):
+                    pos = _donate_positions(dec)
+                else:
+                    continue
+                if not pos:
+                    continue
+                params = [a.arg for a in f.args.args]
+                if params and params[0] == "self":
+                    out[("self", f.name)] = tuple(p - 1 for p in pos if p >= 1)
+                else:
+                    out[("name", f.name)] = pos
         return out
+
+    def _find_transitive_donators(self) -> Dict[Tuple[str, str],
+                                                Tuple[int, ...]]:
+        """(kind, name) -> call-site positions a *helper* forwards into a
+        donated position of a known donating callable — the PR-9
+        `_donate_safe` bug class: the helper's caller still holds the name,
+        but the buffer is gone. Computed to fixpoint so helpers of helpers
+        donate too."""
+        table: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        for _ in range(4):  # call chains deeper than this don't occur here
+            grew = False
+            for f in self.funcs:
+                params = [a.arg for a in f.args.args]
+                offset = 1 if params and params[0] == "self" else 0
+                donated: Set[int] = set(table.get(("name", f.name), ())) | \
+                    set(table.get(("self", f.name), ()))
+                known = {**self.donators, **table}
+                for node in ast.walk(f):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    key = None
+                    if isinstance(node.func, ast.Name):
+                        key = ("name", node.func.id)
+                    elif (isinstance(node.func, ast.Attribute)
+                          and isinstance(node.func.value, ast.Name)
+                          and node.func.value.id == "self"):
+                        key = ("self", node.func.attr)
+                    pos = known.get(key or ("", ""))
+                    if not pos:
+                        continue
+                    for p in pos:
+                        if p >= len(node.args):
+                            continue
+                        arg = node.args[p]
+                        if (isinstance(arg, ast.Name)
+                                and arg.id in params[offset:]):
+                            donated.add(params.index(arg.id) - offset)
+                if donated:
+                    new = tuple(sorted(donated))
+                    for key in ((("self", f.name),) if offset
+                                else (("name", f.name),)):
+                        if key not in self.donators and table.get(key) != new:
+                            table[key] = new
+                            grew = True
+            if not grew:
+                break
+        return table
 
     def _jit_roots(self) -> Set[str]:
         roots: Set[str] = set()
@@ -288,10 +358,12 @@ class _Module:
         for f in self.funcs:
             self._rule_key_reuse(f)
             self._rule_use_after_donate(f)
+            self._rule_donation_lifetime(f)
             if f in self.jit_reachable:
                 self._rule_host_read(f)
                 self._rule_tracer_branch(f)
         self._rule_unguarded_mutation()
+        self._rule_lock_discipline()
         self._rule_silent_except()
         self._rule_wall_clock()
         self._check_pragma_rules()
@@ -527,6 +599,201 @@ class _Module:
         class _Shim:
             body = [stmt]
         self._scan_mutations(_Shim, locks, guarded)
+
+    def _lock_scan(self, meth, locks: Set[str]):
+        """(guarded_writes, unguarded_writes, calls, acquires) for one
+        method: which self fields it writes under / outside `with
+        self.<lock>:`, which self methods it calls (and under which guard
+        state), and whether it ever takes a lock itself."""
+        guarded_w: Set[str] = set()
+        unguarded_w: List[Tuple[str, ast.stmt]] = []
+        calls: List[Tuple[str, ast.AST, bool]] = []
+        acquires = False
+
+        def walk(stmts, guarded):
+            nonlocal acquires
+            for stmt in stmts:
+                g = guarded
+                if isinstance(stmt, ast.With):
+                    for item in stmt.items:
+                        d = _dotted(item.context_expr)
+                        if d and d.startswith("self.") and d[5:] in locks:
+                            g = acquires = True
+                for kind, attr in _store_keys(stmt):
+                    if kind != "self" or attr in locks:
+                        continue
+                    if g:
+                        guarded_w.add(attr)
+                    else:
+                        unguarded_w.append((attr, stmt))
+                for node in _walk_exprs(_header_nodes(stmt)):
+                    if (isinstance(node, ast.Call)
+                            and isinstance(node.func, ast.Attribute)
+                            and isinstance(node.func.value, ast.Name)
+                            and node.func.value.id == "self"):
+                        calls.append((node.func.attr, node, g))
+                walk(_stmt_children(stmt), g)
+
+        walk(meth.body, False)
+        return guarded_w, unguarded_w, calls, acquires
+
+    def _rule_lock_discipline(self) -> None:
+        """Per lock-owning class: fields written under the lock anywhere
+        define the guarded set; a write to a guarded field without the
+        lock — or a call, without the lock, to a helper whose writes are
+        only correct because its callers normally hold it — breaks the
+        discipline. Finer than unguarded-mutation (which flags every bare
+        self-write): this one follows the *field* across methods and
+        through one level of helper calls."""
+        for cls in ast.walk(self.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = self._lock_attrs(cls)
+            if not locks:
+                continue
+            methods = [m for m in cls.body
+                       if isinstance(m, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+            scans = {m.name: self._lock_scan(m, locks) for m in methods}
+            guarded_fields: Set[str] = set()
+            for name, (gw, _, _, _) in scans.items():
+                if name != "__init__":
+                    guarded_fields |= gw
+            # helpers: never take the lock themselves, write fields bare,
+            # and have at least one lock-held call site — i.e. they *rely*
+            # on the caller's guard, so their writes are guarded by
+            # convention and every bare call site breaks it
+            guarded_sites: Set[str] = set()
+            for name, (_, _, calls, _) in scans.items():
+                guarded_sites |= {c for c, _, g in calls if g}
+            helpers = {
+                name for name, (_, uw, _, acq) in scans.items()
+                if name != "__init__" and not acq and name in guarded_sites
+                and uw}
+            for name in helpers:
+                guarded_fields |= {a for a, _ in scans[name][1]}
+            if not guarded_fields:
+                continue
+            for meth in methods:
+                if meth.name == "__init__":
+                    continue
+                _, unguarded_w, calls, _ = scans[meth.name]
+                if meth.name not in helpers:
+                    for attr, stmt in unguarded_w:
+                        if attr in guarded_fields:
+                            self.report(
+                                "lock-discipline", stmt,
+                                f"self.{attr} is written under "
+                                f"self.{sorted(locks)[0]} elsewhere in "
+                                f"{cls.name} but written here without the "
+                                "lock — a concurrent writer can interleave")
+                for callee, node, g in calls:
+                    if callee in helpers and not g:
+                        fields = sorted({a for a, _ in scans[callee][1]}
+                                        & guarded_fields)
+                        self.report(
+                            "lock-discipline", node,
+                            f"self.{callee}() writes lock-guarded "
+                            f"{', '.join('self.' + a for a in fields)} and "
+                            "its other call sites hold "
+                            f"self.{sorted(locks)[0]} — call it with the "
+                            "lock held")
+
+    def _rule_donation_lifetime(self, f: ast.FunctionDef) -> None:
+        """Donated buffers reachable after the donating call through an
+        alias (`alias = carry; step(carry); alias`), through a helper
+        boundary (the helper forwards its parameter into a donated
+        position, so the *caller's* binding dies), or donated twice in one
+        call (two argument positions resolving to one buffer). Direct
+        same-name reads after a direct donating call stay with
+        use-after-donate; this rule covers the flows that one misses."""
+        donators = {**self.donators, **self.transitive_donators}
+        if not donators:
+            return
+        aliases: Dict[str, Tuple[str, str]] = {}
+        dead: Dict[Tuple[str, str], Tuple[int, bool]] = {}  # -> (line, via helper)
+
+        def root_of(node: ast.AST) -> Optional[Tuple[str, str]]:
+            if isinstance(node, ast.Name):
+                return aliases.get(node.id, ("name", node.id))
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                return ("self", node.attr)
+            return None
+
+        for stmt in _flat_stmts(f.body):
+            header = _header_nodes(stmt)
+            # 1) reads of dead buffers: through an alias always, directly
+            #    only when the donation went through a helper (the direct
+            #    case is use-after-donate's)
+            for node in _walk_exprs(header):
+                key = root = None
+                if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                             ast.Load):
+                    key = ("name", node.id)
+                    root = aliases.get(node.id, key)
+                elif (isinstance(node, ast.Attribute)
+                      and isinstance(node.value, ast.Name)
+                      and node.value.id == "self"
+                      and isinstance(node.ctx, ast.Load)):
+                    key = root = ("self", node.attr)
+                if root not in dead:
+                    continue
+                line, via_helper = dead[root]
+                if key != root or via_helper:
+                    what = key[1] if key[0] == "name" else f"self.{key[1]}"
+                    how = ("donated through a helper call"
+                           if key == root else
+                           f"an alias of {root[1]!r}, donated")
+                    self.report(
+                        "donation-lifetime", node,
+                        f"{what} is {how} on line {line} and read here — "
+                        "the buffer may already be reused by XLA")
+            # 2) donations (and double-donations) made by this statement
+            for node in _walk_exprs(header):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee_key = None
+                if isinstance(node.func, ast.Name):
+                    callee_key = ("name", node.func.id)
+                elif (isinstance(node.func, ast.Attribute)
+                      and isinstance(node.func.value, ast.Name)
+                      and node.func.value.id == "self"):
+                    callee_key = ("self", node.func.attr)
+                pos = donators.get(callee_key or ("", ""))
+                if not pos:
+                    continue
+                via_helper = callee_key in self.transitive_donators
+                seen: Dict[Tuple[str, str], int] = {}
+                for p in pos:
+                    if p >= len(node.args):
+                        continue
+                    root = root_of(node.args[p])
+                    if root is None:
+                        continue
+                    if root in seen:
+                        what = (root[1] if root[0] == "name"
+                                else f"self.{root[1]}")
+                        self.report(
+                            "donation-lifetime", node,
+                            f"{what} is donated twice in one call (arg "
+                            f"positions {seen[root]} and {p}) — XLA would "
+                            "alias one buffer to two outputs; dedupe "
+                            "before donating")
+                    seen[root] = p
+                    dead[root] = (node.lineno, via_helper)
+            # 3) rebinding resurrects the buffer and retargets aliases
+            for key in _store_keys(stmt):
+                dead.pop(key, None)
+                if key[0] == "name":
+                    aliases.pop(key[1], None)
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, (ast.Name, ast.Attribute))):
+                root = root_of(stmt.value)
+                if root is not None:
+                    aliases[stmt.targets[0].id] = root
 
     def _rule_silent_except(self) -> None:
         for node in ast.walk(self.tree):

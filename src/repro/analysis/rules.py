@@ -37,6 +37,16 @@ RULES: Dict[str, str] = {
     "unguarded-mutation": (
         "shared attribute mutated outside the owning class's lock/condition "
         "in a class that synchronizes with threading primitives"),
+    "lock-discipline": (
+        "a field that is written under the class's lock/condition elsewhere "
+        "is written — or a helper that writes it is called — without holding "
+        "the lock; every cross-thread writer of a guarded field must share "
+        "the guard"),
+    "donation-lifetime": (
+        "a donated buffer stays reachable after the donating call through an "
+        "alias, a helper-function caller, or a second donated argument "
+        "position — aliases and transitive callers must treat the donated "
+        "value as dead"),
     "silent-except": (
         "broad `except Exception` (or bare except) that neither re-raises "
         "nor logs — unexpected errors vanish"),

@@ -52,11 +52,19 @@ def _shape_bytes(type_str: str) -> int:
 
 
 def _shape_dims(type_str: str) -> Optional[List[int]]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return None
-    dims = m.group(2)
-    return [int(d) for d in dims.split(",") if d] if dims else []
+    """Dims of the first *array* shape in `type_str`.
+
+    Full-module texts put tuple types and `token[]` in instruction type
+    positions (`(f32[4,2], token[])` on while/infeed roots); tokens and
+    other non-array entries carry no bytes and must not masquerade as a
+    scalar shape, so entries whose dtype is unknown are skipped rather
+    than returned as `[]`.
+    """
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        return [int(d) for d in dims.split(",") if d] if dims else []
+    return None
 
 
 # elementwise ops cost 1 flop per output element (HloCostAnalysis semantics);
@@ -144,19 +152,38 @@ def parse_computations(hlo_text: str) -> Dict[str, List[Instr]]:
 
 
 def _dot_flops(ins: Instr, symtab: Dict[str, Instr]) -> float:
+    """2·|out|·K for a dot; K = product of the contracting dims.
+
+    |out| already includes the batch dims of a batched dot
+    (`lhs_batch_dims={0}` style), so only the contraction K must come from
+    an operand shape. The lhs operand is preferred; when it is not in this
+    computation's symbol table (full-module texts can reference values the
+    per-computation parse did not capture) the rhs operand with
+    `rhs_contracting_dims` answers instead.
+    """
     out_dims = _shape_dims(ins.type_str) or []
     out_elems = math.prod(out_dims) if out_dims else 1
-    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
-    contracting = [int(x) for x in m.group(1).split(",") if x] if m else []
-    k = 1
-    if ins.operands:
-        lhs = symtab.get(ins.operands[0])
-        if lhs is not None:
-            lhs_dims = _shape_dims(lhs.type_str) or []
-            for c in contracting:
-                if c < len(lhs_dims):
-                    k *= lhs_dims[c]
-    return 2.0 * out_elems * k
+
+    def _k(operand_idx: int, side: str) -> Optional[float]:
+        if operand_idx >= len(ins.operands):
+            return None
+        src = symtab.get(ins.operands[operand_idx])
+        if src is None:
+            return None
+        m = re.search(rf"{side}_contracting_dims=\{{([0-9,]*)\}}", ins.rhs)
+        if not m:
+            return None
+        dims = _shape_dims(src.type_str) or []
+        k = 1.0
+        for c in (int(x) for x in m.group(1).split(",") if x):
+            if c < len(dims):
+                k *= dims[c]
+        return k
+
+    k = _k(0, "lhs")
+    if k is None:
+        k = _k(1, "rhs")
+    return 2.0 * out_elems * (k if k is not None else 1.0)
 
 
 class Analysis(dict):
@@ -196,23 +223,78 @@ def host_transfer_ops(hlo_text: str) -> List[str]:
     return found
 
 
+def _entry_computation(comps: Dict[str, List[Instr]], hlo_text: str,
+                       entry: Optional[str] = None) -> str:
+    """The ENTRY computation's name, else the one never called."""
+    if entry is not None:
+        return entry
+    em = re.search(r"^\s*ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    if em and em.group(1) in comps:
+        return em.group(1)
+    called = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            called.update(_CALLED_RE.findall(ins.rhs))
+    entries = [c for c in comps if c not in called]
+    return entries[0] if entries else next(iter(comps))
+
+
+# ops whose "output" aliases or annotates existing buffers — zero-cost views
+# for liveness purposes (counting them would double-count tuple elements)
+_VIEW_OPS = ("get-tuple-element", "tuple", "bitcast", "parameter")
+
+
+def peak_live_bytes(hlo_text: str, entry: Optional[str] = None) -> float:
+    """Static peak of simultaneously-live buffer bytes in the entry frame.
+
+    A linear liveness scan over the entry computation in program order:
+    each non-view instruction's output becomes live at its definition and
+    dies after its last use; parameters are live from the start; the root
+    lives to the end. Called computations (while bodies, fusions) are
+    treated as atomic — their internal temporaries are not modeled — so
+    this is an *entry-frame* estimate: deterministic, platform-independent,
+    and exactly the kind of monotonic signal a regression gate needs
+    (a step program that starts double-buffering its carry moves this
+    number, timing noise never does). Donation/aliasing is ignored, making
+    it a conservative upper bound.
+    """
+    comps = parse_computations(hlo_text)
+    if not comps:
+        return 0.0
+    instrs = comps.get(_entry_computation(comps, hlo_text, entry), [])
+    if not instrs:
+        return 0.0
+    sizes = {ins.name: (0.0 if ins.opcode in _VIEW_OPS and ins.opcode != "parameter"
+                        else float(_shape_bytes(ins.type_str)))
+             for ins in instrs}
+    last_use = {ins.name: i for i, ins in enumerate(instrs)}  # def-only: die at def
+    for i, ins in enumerate(instrs):
+        for op in ins.operands:
+            if op in last_use:
+                last_use[op] = max(last_use[op], i)
+    last_use[instrs[-1].name] = len(instrs)  # the root survives the program
+    live = peak = 0.0
+    # parameters are input buffers: live before the first instruction runs
+    for ins in instrs:
+        if ins.opcode == "parameter":
+            live += sizes[ins.name]
+    peak = live
+    for i, ins in enumerate(instrs):
+        if ins.opcode != "parameter":
+            live += sizes[ins.name]
+        peak = max(peak, live)
+        for op in set(ins.operands) | {ins.name}:
+            if last_use.get(op) == i:
+                live -= sizes.get(op, 0.0)
+    return peak
+
+
 def analyze_hlo(hlo_text: str, entry: Optional[str] = None) -> Analysis:
     comps = parse_computations(hlo_text)
     if not comps:
         return Analysis(flops=0.0, bytes=0.0,
                         collectives={c: 0.0 for c in _COLLECTIVES} | {"total": 0.0})
-    # entry = computation marked ENTRY, else the one never called
-    if entry is None:
-        em = re.search(r"^\s*ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
-        if em and em.group(1) in comps:
-            entry = em.group(1)
-    if entry is None:
-        called = set()
-        for instrs in comps.values():
-            for ins in instrs:
-                called.update(_CALLED_RE.findall(ins.rhs))
-        entries = [c for c in comps if c not in called]
-        entry = entries[0] if entries else next(iter(comps))
+    entry = _entry_computation(comps, hlo_text, entry)
 
     memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
 

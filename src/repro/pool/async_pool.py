@@ -211,11 +211,13 @@ class AsyncEnvPool:
     def step_lowered(self):
         """Lower (don't run) the masked-step core — for HLO inspection:
         fig_async certifies it contains zero host-transfer instructions."""
-        self._ensure_carry()
         acts = jnp.zeros((self.num_slots,) + tuple(self.action_space.shape),
                          self.action_space.dtype)
+        with self._cond:
+            self._ensure_carry()
+            carry = self._carry
         return jax.jit(self._step_impl).lower(
-            self._carry, acts, jnp.zeros(self.num_slots, bool),
+            carry, acts, jnp.zeros(self.num_slots, bool),
             jax.random.PRNGKey(0))
 
     # -- slot lifecycle ------------------------------------------------------
@@ -411,12 +413,13 @@ class AsyncEnvPool:
             return jnp.copy(self._carry[1])
 
     def step(self, actions) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
-        if self._key is None:
-            raise RuntimeError("call reset() before step()")
-        if not self._active.all():
-            raise RuntimeError("lock-step facade needs every slot active; "
-                               "use send/recv with a partial session set")
         with self._cond:  # facade key chain is shared state like _pending
+            if self._key is None:
+                raise RuntimeError("call reset() before step()")
+            if not self._active.all():
+                raise RuntimeError("lock-step facade needs every slot "
+                                   "active; use send/recv with a partial "
+                                   "session set")
             self._key, step_key = tuple(jax.random.split(self._key))
         self.send(actions, np.arange(self.num_slots))
         obs, rew, done, info, _ = self.recv(key=step_key)

@@ -26,6 +26,9 @@ from typing import Optional
 CPU_TDP_WATTS = 95.0
 # World-average grid intensity, kgCO2/kWh (IEA 2021; Henderson et al. default).
 CARBON_INTENSITY_KG_PER_KWH = 0.475
+# Accelerator envelope for the *static* cost model (TPU v5e chip TDP class);
+# pairs with the benchmarks/roofline.py per-chip ceilings.
+ACCELERATOR_TDP_WATTS = 200.0
 
 
 @dataclasses.dataclass
@@ -61,6 +64,49 @@ class Impact:
             "utilisation": self.utilisation,
             "energy_mWh": self.energy_mwh,
             "co2_kg": self.co2_kg,
+        }
+
+
+@dataclasses.dataclass
+class StaticImpact:
+    """Compile-time Table II analogue: energy/CO₂ from the *static* roofline
+    time bound instead of a measured wall clock.
+
+    `seconds_per_step` is the HLO-derived roofline bound per env step
+    (max of compute/memory/collective time, divided by env steps per
+    program — see `repro.analysis.cost`); `watts` the power envelope the
+    bound is charged against. Deterministic by construction: the same
+    compiled artifact always yields the same joules, so these numbers can
+    be *gated*, where measured joules can only be observed.
+    """
+
+    seconds_per_step: float
+    watts: float = ACCELERATOR_TDP_WATTS
+
+    @property
+    def joules_per_step(self) -> float:
+        return self.seconds_per_step * self.watts
+
+    @property
+    def joules_per_mstep(self) -> float:
+        """Joules per million env steps (the Table II normalisation)."""
+        return self.joules_per_step * 1e6
+
+    @property
+    def kwh_per_mstep(self) -> float:
+        return self.joules_per_mstep / 3.6e6
+
+    @property
+    def co2_g_per_mstep(self) -> float:
+        return self.kwh_per_mstep * CARBON_INTENSITY_KG_PER_KWH * 1e3
+
+    def report(self) -> dict:
+        return {
+            "seconds_per_step": self.seconds_per_step,
+            "watts": self.watts,
+            "joules_per_mstep": self.joules_per_mstep,
+            "kwh_per_mstep": self.kwh_per_mstep,
+            "co2_g_per_mstep": self.co2_g_per_mstep,
         }
 
 

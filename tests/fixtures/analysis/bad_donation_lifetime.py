@@ -1,0 +1,31 @@
+import jax
+
+
+def _step_impl(carry, actions):
+    return carry, actions
+
+
+_step = jax.jit(_step_impl, donate_argnums=(0,))
+_pair = jax.jit(lambda a, b: (a, b), donate_argnums=(0, 1))
+
+
+def advance(carry, actions):
+    """Forwards its parameter into the donated position: the *caller's*
+    binding dies when this returns."""
+    return _step(carry, actions)
+
+
+def alias_read(carry, actions):
+    stale = carry
+    new_carry, out = _step(carry, actions)
+    return new_carry, out, stale[0]  # alias of the donated carry
+
+
+def helper_boundary(carry, actions):
+    new_carry, out = advance(carry, actions)
+    return new_carry, out, carry[0]  # donated through advance()
+
+
+def double_donation(carry):
+    twin = carry
+    return _pair(carry, twin)  # one buffer in two donated positions

@@ -1,0 +1,29 @@
+import threading
+
+
+class Refiller:
+    """Two lock-discipline breaks: `drain` writes self._pending bare even
+    though `admit` writes it under the condition, and `snapshot` calls the
+    `_advance` helper — whose bare writes are only safe under the callers'
+    lock — without holding it."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._pending = 0
+        self._tick = 0
+
+    def admit(self, n):
+        with self._cond:
+            self._pending += n
+            self._advance()
+            self._cond.notify_all()
+
+    def drain(self):
+        self._pending = 0  # guarded field written without the lock
+
+    def _advance(self):
+        self._tick += 1
+
+    def snapshot(self):
+        self._advance()  # helper relies on the caller's lock; none held
+        return self._tick

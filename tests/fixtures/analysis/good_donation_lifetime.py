@@ -1,0 +1,29 @@
+import jax
+
+
+def _step_impl(carry, actions):
+    return carry, actions
+
+
+_step = jax.jit(_step_impl, donate_argnums=(0,))
+_pair = jax.jit(lambda a, b: (a, b), donate_argnums=(0, 1))
+
+
+def advance(carry, actions):
+    return _step(carry, actions)
+
+
+def alias_rebound(carry, actions):
+    stale = carry
+    new_carry, out = _step(carry, actions)
+    stale = new_carry  # retargeted before any read
+    return new_carry, out, stale[0]
+
+
+def helper_boundary(carry, actions):
+    carry, out = advance(carry, actions)  # rebinding resurrects the name
+    return carry, out, carry[0]
+
+
+def double_donation(left, right):
+    return _pair(left, right)  # two distinct buffers

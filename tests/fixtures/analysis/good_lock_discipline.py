@@ -1,0 +1,26 @@
+import threading
+
+
+class Refiller:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._pending = 0
+        self._tick = 0
+
+    def admit(self, n):
+        with self._cond:
+            self._pending += n
+            self._advance()
+            self._cond.notify_all()
+
+    def drain(self):
+        with self._cond:
+            self._pending = 0
+
+    def _advance(self):
+        self._tick += 1
+
+    def snapshot(self):
+        with self._cond:
+            self._advance()
+            return self._tick

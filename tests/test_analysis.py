@@ -41,6 +41,8 @@ RULE_FIXTURE = {
     "use-after-donate": "use_after_donate",
     "tracer-branch": "tracer_branch",
     "unguarded-mutation": "unguarded_mutation",
+    "lock-discipline": "lock_discipline",
+    "donation-lifetime": "donation_lifetime",
     "silent-except": "silent_except",
     "wall-clock": "wall_clock",
 }

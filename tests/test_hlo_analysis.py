@@ -97,3 +97,128 @@ def test_model_train_step_flops_match_6nd():
     # attention score/value matmuls: 12·L²·d per layer (fwd+bwd, both einsums)
     expect += 12 * cfg.num_layers * d_tokens * l * cfg.num_heads * cfg.hd
     assert 0.5 * expect < a.flops < 2.0 * expect, (a.flops, expect)
+
+
+# -- full-module hardening: tuple/token types, batched dots, liveness ---------
+
+from repro.launch.hlo_analysis import (_dot_flops, _shape_bytes, _shape_dims,
+                                       parse_computations, peak_live_bytes)
+
+NESTED_TUPLE_HLO = """\
+HloModule jit_step
+
+%body (arg: (f32[4,2], s32[], token[])) -> (f32[4,2], s32[], token[]) {
+  %arg = (f32[4,2]{1,0}, s32[], token[]) parameter(0)
+  %gte0 = f32[4,2]{1,0} get-tuple-element(%arg), index=0
+  %gte1 = s32[] get-tuple-element(%arg), index=1
+  %tok = token[] get-tuple-element(%arg), index=2
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte1, %one)
+  %twice = f32[4,2]{1,0} add(%gte0, %gte0)
+  ROOT %tuple = (f32[4,2]{1,0} /*index=0*/, s32[], token[]) tuple(%twice, %next, %tok)
+}
+
+%cond (arg: (f32[4,2], s32[], token[])) -> pred[] {
+  %arg = (f32[4,2]{1,0}, s32[], token[]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=1
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[4,2]) -> f32[4,2] {
+  %p = f32[4,2]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tok0 = token[] after-all()
+  %init = (f32[4,2]{1,0}, s32[], token[]) tuple(%p, %zero, %tok0)
+  %w = (f32[4,2]{1,0}, s32[], token[]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[4,2]{1,0} get-tuple-element(%w), index=0
+}
+"""
+
+BATCHED_DOT_HLO = """\
+HloModule jit_bmm
+
+ENTRY %main (p0: f32[8,16,32], p1: f32[8,32,64]) -> f32[8,16,64] {
+  %p0 = f32[8,16,32]{2,1,0} parameter(0)
+  %p1 = f32[8,32,64]{2,1,0} parameter(1)
+  ROOT %dot = f32[8,16,64]{2,1,0} dot(%p0, %p1), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}
+}
+"""
+
+
+def test_shape_bytes_skips_tokens_inside_tuples():
+    assert _shape_bytes("(f32[2,2]{1,0}, token[])") == 16
+    assert _shape_bytes("token[]") == 0
+    assert _shape_bytes("(f32[4,2]{1,0}, s32[], token[])") == 36
+
+
+def test_shape_dims_skips_non_array_entries():
+    assert _shape_dims("(token[], f32[4,2]{1,0})") == [4, 2]
+    assert _shape_dims("token[]") is None
+    assert _shape_dims("s32[]") == []
+
+
+def test_nested_tuple_while_module_parses_and_counts_trips():
+    comps = parse_computations(NESTED_TUPLE_HLO)
+    assert set(comps) == {"body", "cond", "main"}
+    a = analyze_hlo(NESTED_TUPLE_HLO)
+    # body: 1 (s32 add) + 8 (f32[4,2] add) flops, x5 trips from the cond
+    assert a.flops == 45.0
+    assert a.bytes > 0
+    assert a.collective_bytes == 0.0
+
+
+def test_batched_dot_contracts_the_right_dim():
+    # |out| = 8*16*64 already includes the batch dim; K = 32 from the lhs
+    a = analyze_hlo(BATCHED_DOT_HLO)
+    assert a.flops == 2.0 * 8 * 16 * 64 * 32
+
+
+def test_dot_falls_back_to_rhs_when_lhs_unresolved():
+    hlo = """\
+ENTRY %main (p1: f32[32,64]) -> f32[16,64] {
+  %p1 = f32[32,64]{1,0} parameter(0)
+  ROOT %dot = f32[16,64]{1,0} dot(%ext, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_computations(hlo)
+    symtab = {i.name: i for i in comps["main"]}
+    dot = symtab["dot"]
+    assert "ext" not in symtab
+    assert _dot_flops(dot, symtab) == 2.0 * 16 * 64 * 32
+
+
+def test_peak_live_bytes_linear_chain():
+    hlo = """\
+ENTRY %main (p: f32[4,2]) -> f32[4,2] {
+  %p = f32[4,2]{1,0} parameter(0)
+  %a = f32[4,2]{1,0} add(%p, %p)
+  %b = f32[4,2]{1,0} multiply(%a, %a)
+  ROOT %c = f32[4,2]{1,0} add(%b, %b)
+}
+"""
+    # two 32-byte buffers live at once (producer + consumer), never three
+    assert peak_live_bytes(hlo) == 64.0
+
+
+def test_peak_live_bytes_tuple_views_are_free():
+    hlo = """\
+ENTRY %e (p: f32[2,2]) -> (f32[2,2], f32[2,2]) {
+  %p = f32[2,2]{1,0} parameter(0)
+  %a = f32[2,2]{1,0} add(%p, %p)
+  ROOT %t = (f32[2,2]{1,0}, f32[2,2]{1,0}) tuple(%p, %a)
+}
+"""
+    # the tuple aliases p and a; counting it would double to 64
+    assert peak_live_bytes(hlo) == 32.0
+
+
+def test_peak_live_bytes_on_a_real_compiled_program():
+    m = 64
+    c = _compile(lambda a, b: (a @ b) @ b,
+                 jax.ShapeDtypeStruct((m, m), jnp.float32),
+                 jax.ShapeDtypeStruct((m, m), jnp.float32))
+    peak = peak_live_bytes(c.as_text())
+    # at least the two parameters plus one live temp
+    assert peak >= 3 * m * m * 4
+    assert peak_live_bytes("") == 0.0
